@@ -1,0 +1,93 @@
+"""Aggregate dry-run cell JSONs into the §Roofline / §Dry-run tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+ARCH_ORDER = ["llava_next_34b", "mamba2_130m", "qwen3_moe_235b_a22b",
+              "granite_moe_1b_a400m", "qwen3_14b", "deepseek_7b",
+              "h2o_danube_3_4b", "qwen3_1_7b", "zamba2_7b",
+              "whisper_large_v3"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = "") -> dict:
+    out = {}
+    suffix = f"__{mesh}" + (f"__{tag}" if tag else "")
+    for p in sorted(RESULTS.glob(f"*{suffix}.json")):
+        d = json.loads(p.read_text())
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_table(cells: dict, md=False) -> str:
+    hdr = ["arch", "shape", "t_comp(s)", "t_mem(s)", "t_coll(s)",
+           "bottleneck", "useful", "roofline", "mem/dev(GiB)"]
+    rows = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((a, s))
+            if d is None:
+                continue
+            if "skipped" in d:
+                rows.append([a, s, "-", "-", "-", "SKIP", "-", "-", "-"])
+                continue
+            r = d["roofline"]
+            mem = d["memory"]["bytes_per_device"] / 2**30
+            rows.append([
+                a, s, f"{r['t_compute_s']:.3f}", f"{r['t_memory_s']:.3f}",
+                f"{r['t_collective_s']:.3f}", r["bottleneck"],
+                f"{r['useful_flops_ratio']:.2f}",
+                f"{r['roofline_fraction']:.3f}", f"{mem:.2f}"])
+    widths = [max(len(h), *(len(row[i]) for row in rows)) if rows else len(h)
+              for i, h in enumerate(hdr)]
+    sep = " | " if md else "  "
+    lines = [sep.join(h.ljust(w) for h, w in zip(hdr, widths))]
+    if md:
+        lines.insert(0, "| " + lines[0] + " |")
+        lines[0] = "| " + sep.join(h.ljust(w) for h, w in zip(hdr, widths)) + " |"
+        lines = [lines[0],
+                 "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
+        for row in rows:
+            lines.append("| " + sep.join(c.ljust(w)
+                                         for c, w in zip(row, widths)) + " |")
+    else:
+        for row in rows:
+            lines.append(sep.join(c.ljust(w) for c, w in zip(row, widths)))
+    return "\n".join(lines)
+
+
+def summarize(mesh="single", md=False, tag=""):
+    cells = load(mesh, tag)
+    print(fmt_table(cells, md=md))
+    ok = [d for d in cells.values() if "skipped" not in d]
+    if not ok:
+        return
+    worst = min(ok, key=lambda d: d["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda d: d["roofline"]["t_collective_s"] /
+               max(1e-12, max(d["roofline"]["t_compute_s"],
+                              d["roofline"]["t_memory_s"])))
+    print(f"\ncells: {len(cells)} ({len(ok)} compiled, "
+          f"{len(cells)-len(ok)} skipped)")
+    print(f"worst roofline fraction: {worst['arch']}/{worst['shape']} "
+          f"({worst['roofline']['roofline_fraction']:.4f})")
+    print(f"most collective-bound: {coll['arch']}/{coll['shape']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    summarize(args.mesh, args.md, args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end driver: losslessly compress/decompress any file with a
+trained predictor (the paper's system as a CLI tool).
+
+  PYTHONPATH=src:. python examples/compress_file.py compress  IN OUT.llmc
+  PYTHONPATH=src:. python examples/compress_file.py decompress IN.llmc OUT
+"""
+import sys
+import time
+
+sys.path[:0] = ["src", "."]
+
+
+def main():
+    from benchmarks.prep import predictor
+    from repro.core import LLMCompressor
+    from repro.data.tokenizer import decode, encode
+
+    mode, src, dst = sys.argv[1], sys.argv[2], sys.argv[3]
+    pred = predictor("pred-base")
+    comp = LLMCompressor(pred, chunk_size=128, topk=48, decode_batch=32)
+    data = open(src, "rb").read()
+    t0 = time.time()
+    if mode == "compress":
+        blob, stats = comp.compress(encode(data))
+        open(dst, "wb").write(blob)
+        print(f"{len(data)}B -> {len(blob)}B "
+              f"({len(data)/max(1,len(blob)):.2f}x, {stats.n_escapes} escapes, "
+              f"{time.time()-t0:.1f}s)")
+    elif mode == "decompress":
+        toks = comp.decompress(data)
+        open(dst, "wb").write(decode(toks))
+        print(f"{len(data)}B -> decoded {toks.size} tokens "
+              f"({time.time()-t0:.1f}s)")
+    else:
+        raise SystemExit("mode must be compress|decompress")
+
+
+if __name__ == "__main__":
+    main()

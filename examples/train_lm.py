@@ -1,0 +1,19 @@
+"""Train a predictor LM with the production training stack (checkpointing,
+auto-resume, watchdog fault tolerance, grad compression).
+
+  PYTHONPATH=src:. python examples/train_lm.py
+Equivalent to:
+  python -m repro.launch.train --arch qwen3_1_7b --smoke --steps 100 \
+      --ckpt-dir /tmp/lm_ckpt --watchdog
+"""
+import sys
+
+sys.path[:0] = ["src", "."]
+sys.argv = [sys.argv[0], "--arch", "qwen3_1_7b", "--smoke",
+            "--steps", "60", "--batch", "8", "--seq-len", "128",
+            "--ckpt-dir", "/tmp/lm_ckpt", "--ckpt-every", "20"]
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

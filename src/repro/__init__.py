@@ -1,0 +1,3 @@
+"""repro — JAX framework reproducing 'Lossless Compression of LLM-Generated
+Text via Next-Token Prediction' at production scale."""
+__version__ = "0.1.0"

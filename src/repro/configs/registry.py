@@ -1,0 +1,40 @@
+"""Architecture registry: the 10 assigned architectures (+ the small
+predictor configs used for measured compression experiments).
+
+Every entry matches the assignment block verbatim; see each <id>.py module
+for the single-config file and DESIGN.md §5 for applicability notes.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+ARCH_IDS = [
+    "llava_next_34b",
+    "mamba2_130m",
+    "qwen3_moe_235b_a22b",
+    "granite_moe_1b_a400m",
+    "qwen3_14b",
+    "deepseek_7b",
+    "h2o_danube_3_4b",
+    "qwen3_1_7b",
+    "zamba2_7b",
+    "whisper_large_v3",
+]
+
+# assigned ids use dashes
+def canon(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str):
+    mod = import_module(f"repro.configs.{canon(arch_id)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str):
+    mod = import_module(f"repro.configs.{canon(arch_id)}")
+    return mod.SMOKE_CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

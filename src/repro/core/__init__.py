@@ -1,0 +1,12 @@
+"""Core of the paper's contribution: LLM next-token prediction as the
+probability model for lossless arithmetic coding."""
+from .ac import ArithmeticDecoder, ArithmeticEncoder, uniform_cdf
+from .cdf import (coding_cost_bits, logits_to_cdf, pmf_to_cdf,
+                  quantize_pmf, topk_quantized)
+from .compressor import CompressionStats, LLMCompressor, PredictorAdapter
+
+__all__ = [
+    "ArithmeticDecoder", "ArithmeticEncoder", "uniform_cdf",
+    "coding_cost_bits", "logits_to_cdf", "pmf_to_cdf", "quantize_pmf",
+    "topk_quantized", "CompressionStats", "LLMCompressor", "PredictorAdapter",
+]

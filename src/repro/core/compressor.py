@@ -1,0 +1,286 @@
+"""The paper's LLM-based lossless compressor (§4), as a framework component.
+
+Design
+------
+The text is tokenized, split into fixed-size **chunks** (paper §5.4), and
+each chunk is coded *independently* given a fresh context. Independence is
+what makes the workload batchable:
+
+* **compress** — one teacher-forced scoring pass over a (B, C) batch of
+  chunks (a prefill-shaped pjit computation) yields P(x_t | x_<t) for every
+  position; each actual token is then arithmetic-coded with its quantized
+  CDF. Model cost: one forward pass per C tokens.
+
+* **decompress** — B chunks are decoded in lock-step: one `decode_step`
+  (serve-shaped computation, KV/SSM cache) per position for the whole
+  batch; the arithmetic decoder picks each stream's next token from the
+  model CDF, which is then fed back as the next input.
+
+Losslessness requires the *same* quantized CDFs on both sides. Both sides
+run the same jitted function on the same weights with integer quantization,
+so the CDFs are bit-identical (this is exactly why the paper compresses
+instead of re-generating, §4.4 — we make the determinism explicit).
+
+Beyond-paper: top-K + escape coding (see core/cdf.py) bounds host-coder
+work per token at K+1 instead of |V|, at a measured ~0 ratio cost for
+well-predicted text (escapes coded uniformly over V remain lossless).
+
+Container format (little-endian):
+  magic 'LLMC' | u8 version | u8 flags | u16 chunk_size | u32 n_tokens
+  u32 vocab | u16 topk (0 => full vocab) | u8 precision
+  then per chunk: varint byte-length + AC stream.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Callable, Protocol
+
+import numpy as np
+
+from . import ac
+from .cdf import (DEFAULT_PRECISION, build_topk_cdfs, logits_to_cdf,
+                  pmf_to_cdf, topk_quantized_jit)
+
+MAGIC = b"LLMC"
+VERSION = 2
+
+
+class PredictorAdapter(Protocol):
+    """What the compressor needs from a model. See serve/engine.py for the
+    production implementation over the model zoo."""
+
+    vocab_size: int
+    bos_id: int
+
+    def score_chunks(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens (B, C) int32 -> logits (B, C, V): logits[:, t] predicts
+        tokens[:, t] (i.e. the model input is [BOS, x_0 .. x_{C-2}])."""
+        ...
+
+    def begin_decode(self, batch: int):
+        """-> opaque decode state positioned to predict token 0 of each chunk."""
+        ...
+
+    def decode_step(self, state, prev_tokens: np.ndarray):
+        """(state, prev (B,) int32) -> (logits (B, V), new state)."""
+        ...
+
+
+def _write_varint(out: bytearray, v: int) -> None:
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return
+
+
+def _read_varint(buf: bytes, pos: int) -> tuple[int, int]:
+    shift = 0
+    val = 0
+    while True:
+        b = buf[pos]
+        pos += 1
+        val |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return val, pos
+        shift += 7
+
+
+@dataclass
+class CompressionStats:
+    n_tokens: int = 0
+    payload_bytes: int = 0
+    header_bytes: int = 0
+    n_escapes: int = 0
+    ideal_bits: float = 0.0  # -sum log2 p from the un-quantized model
+
+    @property
+    def total_bytes(self) -> int:
+        return self.payload_bytes + self.header_bytes
+
+
+class LLMCompressor:
+    """Chunked LLM-predictor + arithmetic-coding lossless compressor."""
+
+    def __init__(self, predictor: PredictorAdapter, *,
+                 chunk_size: int = 256,
+                 topk: int = 0,
+                 precision: int = DEFAULT_PRECISION,
+                 decode_batch: int = 64):
+        if topk and topk >= predictor.vocab_size:
+            topk = 0
+        self.predictor = predictor
+        self.chunk_size = int(chunk_size)
+        self.topk = int(topk)
+        self.precision = int(precision)
+        self.decode_batch = int(decode_batch)
+        if (1 << precision) <= (topk + 1 if topk else predictor.vocab_size):
+            raise ValueError("precision too small for alphabet")
+
+    # ------------------------------------------------------------- compress
+    def compress(self, tokens: np.ndarray, *,
+                 exact: bool = True) -> tuple[bytes, CompressionStats]:
+        """Compress a token stream.
+
+        exact=True (default) scores with the *decode program* (the same
+        jitted step the decompressor runs), guaranteeing bit-identical CDFs
+        on both sides — the lossless requirement. exact=False scores with
+        the teacher-forced prefill pass: ~C× fewer model invocations and
+        identical in exact arithmetic, but float reduction-order
+        differences between the prefill and decode programs can flip a
+        quantization bucket on rare tokens, so it is reserved for ratio
+        estimation / benchmarking (see DESIGN.md §6).
+        """
+        tokens = np.asarray(tokens, dtype=np.int32).ravel()
+        n = tokens.size
+        C = self.chunk_size
+        n_chunks = max(1, -(-n // C))
+        padded = np.zeros(n_chunks * C, dtype=np.int32)
+        padded[:n] = tokens
+        chunks = padded.reshape(n_chunks, C)
+
+        stats = CompressionStats(n_tokens=n)
+        streams: list[bytes] = []
+        B = self.decode_batch
+        for i in range(0, n_chunks, B):
+            batch = chunks[i:i + B]
+            if exact:
+                logits = self._score_incremental(batch)
+            else:
+                logits = np.asarray(self.predictor.score_chunks(batch))
+            streams.extend(self._encode_batch(batch, logits,
+                                              i, n, stats))
+        out = bytearray()
+        flags = 1 if self.topk else 0
+        out += MAGIC
+        out += struct.pack("<BBHIIHB", VERSION, flags, C, n,
+                           self.predictor.vocab_size, self.topk,
+                           self.precision)
+        stats.header_bytes = len(out) + 0
+        body = bytearray()
+        for s in streams:
+            _write_varint(body, len(s))
+            body += s
+        stats.header_bytes += len(body) - sum(len(s) for s in streams)
+        stats.payload_bytes = sum(len(s) for s in streams)
+        return bytes(out + body), stats
+
+    def _score_incremental(self, batch: np.ndarray) -> np.ndarray:
+        """Teacher-forced scoring through the decode program: one call to
+        the decompressor's own jitted step per position, ground-truth token
+        fed back. Bit-exact with decompression by construction."""
+        B, C = batch.shape
+        if hasattr(self.predictor, "set_decode_len"):
+            self.predictor.set_decode_len(C)
+        state = self.predictor.begin_decode(B)
+        prev = np.full((B,), self.predictor.bos_id, dtype=np.int32)
+        logits = np.zeros((B, C, self.predictor.vocab_size), np.float32)
+        for t in range(C):
+            lg, state = self.predictor.decode_step(state, prev)
+            logits[:, t] = lg
+            prev = batch[:, t]
+        return logits
+
+    def _encode_batch(self, batch, logits, chunk_offset, n_total, stats):
+        V = self.predictor.vocab_size
+        lp = logits.astype(np.float64)
+        lp -= lp.max(axis=-1, keepdims=True)
+        lse = np.log(np.exp(lp).sum(axis=-1, keepdims=True))
+        streams = []
+        if self.topk:
+            ids, qpmf = topk_quantized_jit(logits, self.topk, self.precision)
+            ids, cdfs = build_topk_cdfs(ids, qpmf)
+        for b in range(batch.shape[0]):
+            chunk_idx = chunk_offset + b
+            start = chunk_idx * self.chunk_size
+            valid = min(self.chunk_size, max(0, n_total - start))
+            enc = ac.ArithmeticEncoder()
+            for t in range(valid):
+                sym = int(batch[b, t])
+                stats.ideal_bits += float(
+                    (lse[b, t, 0] - lp[b, t, sym]) / np.log(2.0))
+                if self.topk:
+                    slot = np.nonzero(ids[b, t] == sym)[0]
+                    if slot.size:
+                        enc.encode(int(slot[0]), cdfs[b, t])
+                    else:  # escape, then uniform over the full vocab
+                        stats.n_escapes += 1
+                        enc.encode(self.topk, cdfs[b, t])
+                        enc.encode(sym, ac.uniform_cdf(V))
+                else:
+                    cdf = logits_to_cdf(logits[b, t], self.precision)
+                    enc.encode(sym, cdf)
+            streams.append(enc.finish() if valid else b"")
+        return streams
+
+    # ----------------------------------------------------------- decompress
+    def decompress(self, blob: bytes) -> np.ndarray:
+        if blob[:4] != MAGIC:
+            raise ValueError("bad magic")
+        version, flags, C, n, vocab, topk, precision = struct.unpack(
+            "<BBHIIHB", blob[4:4 + struct.calcsize("<BBHIIHB")])
+        if version != VERSION:
+            raise ValueError(f"unsupported version {version}")
+        if vocab != self.predictor.vocab_size or C != self.chunk_size \
+                or topk != self.topk or precision != self.precision:
+            raise ValueError("compressor configuration mismatch with container")
+        pos = 4 + struct.calcsize("<BBHIIHB")
+        n_chunks = max(1, -(-n // C))
+        streams = []
+        for _ in range(n_chunks):
+            ln, pos = _read_varint(blob, pos)
+            streams.append(blob[pos:pos + ln])
+            pos += ln
+        out = np.zeros(n_chunks * C, dtype=np.int32)
+        B = self.decode_batch
+        for i in range(0, n_chunks, B):
+            group = streams[i:i + B]
+            dec_tokens = self._decode_group(group, C, n, i)
+            out[i * C:(i + len(group)) * C] = dec_tokens.ravel()
+        return out[:n]
+
+    def _decode_group(self, streams, C, n_total, chunk_offset):
+        V = self.predictor.vocab_size
+        B = len(streams)
+        decoders = [ac.ArithmeticDecoder(s) for s in streams]
+        valid = np.array([min(C, max(0, n_total - (chunk_offset + b) * C))
+                          for b in range(B)], dtype=np.int32)
+        tokens = np.zeros((B, C), dtype=np.int32)
+        if hasattr(self.predictor, "set_decode_len"):
+            self.predictor.set_decode_len(C)
+        state = self.predictor.begin_decode(B)
+        prev = np.full((B,), self.predictor.bos_id, dtype=np.int32)
+        for t in range(int(valid.max(initial=0))):
+            logits, state = self.predictor.decode_step(state, prev)
+            logits = np.asarray(logits)
+            if self.topk:
+                ids, qpmf = topk_quantized_jit(logits, self.topk,
+                                               self.precision)
+                ids = np.asarray(ids)
+                cdfs = pmf_to_cdf(np.asarray(qpmf))
+            nxt = np.zeros((B,), dtype=np.int32)
+            for b in range(B):
+                if t >= valid[b]:
+                    continue
+                if self.topk:
+                    slot = decoders[b].decode(cdfs[b])
+                    if slot == self.topk:  # escape
+                        sym = decoders[b].decode(ac.uniform_cdf(V))
+                    else:
+                        sym = int(ids[b, slot])
+                else:
+                    cdf = logits_to_cdf(logits[b], self.precision)
+                    sym = decoders[b].decode(cdf)
+                tokens[b, t] = sym
+                nxt[b] = sym
+            prev = nxt
+        return tokens
+
+    # ------------------------------------------------------------- metrics
+    @staticmethod
+    def ratio(original_bytes: int, blob: bytes) -> float:
+        return original_bytes / max(1, len(blob))

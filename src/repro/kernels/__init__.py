@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+flash attention (prefill), decode attention (KV streaming), SSD intra-chunk
+(mamba2), fused quantized-CDF (arithmetic-coder feed)."""
+from .ops import cdf_points, decode_attention, flash_attention, ssd_intra

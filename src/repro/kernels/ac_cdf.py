@@ -1,0 +1,91 @@
+"""Fused quantized-CDF kernel — the paper-specific hot-spot.
+
+Turning next-token logits into integer CDFs for the arithmetic coder is a
+vocab-sized memory-bound chain (max -> exp -> cumsum -> normalize ->
+round). Left to XLA these materialize V-sized fp32 intermediates per
+token; this kernel streams vocab blocks through VMEM once, carrying
+(running max, running scaled sum) in scratch, then a second sweep emits
+the integer CDF points with a running prefix — two HBM passes total,
+nothing materialized.
+
+Quantization is **cumulative rounding** (see core/cdf.py): strictly
+monotone, exact total, streaming. Grid (B, 2, nv): pass 0 reduces, pass 1
+emits; the pass axis is sequential so scratch carries across.
+
+For padded vocabularies the caller masks pad logits to -inf upstream;
+exp(-inf - max) = 0 contributes nothing and pad symbols get exactly one
+quantum each (they are never coded).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _cdf_kernel(logits_ref, out_ref, m_ref, s_ref, c_ref, *,
+                block_v, nv, budget):
+    p = pl.program_id(1)       # pass: 0 = reduce, 1 = emit
+    j = pl.program_id(2)       # vocab block
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    x = logits_ref[0].astype(jnp.float32)              # (1, block_v)
+
+    @pl.when(p == 0)
+    def _reduce():
+        m_prev, s_prev = m_ref[...], s_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(x, axis=-1, keepdims=True))
+        s_ref[...] = s_prev * jnp.exp(m_prev - m_new) + \
+            jnp.sum(jnp.exp(x - m_new), axis=-1, keepdims=True)
+        m_ref[...] = m_new
+
+    @pl.when(p == 1)
+    def _emit():
+        m, s = m_ref[...], s_ref[...]
+        probs = jnp.exp(x - m) / s                     # normalized block pmf
+        cum = c_ref[...] + jnp.cumsum(probs, axis=-1)  # global prefix
+        c_ref[...] = cum[:, -1:]
+        idx = j * block_v + jax.lax.broadcasted_iota(
+            jnp.int32, cum.shape, 1)
+        pts = jnp.floor(cum * budget + 0.5).astype(jnp.int32) + idx + 1
+        # clamp the tail to the exact total (float cumsum may drift a ulp)
+        pts = jnp.minimum(pts, jnp.int32(budget) + idx + 1)
+        out_ref[...] = pts
+
+
+def cdf_points(logits, precision: int, *, block_v=2048, interpret=False):
+    """logits (B, V) -> int32 CDF interior points (B, V) (cdf[1:];
+    prepend 0 on the host for the coder)."""
+    B, V = logits.shape
+    block_v = min(block_v, V)
+    assert V % block_v == 0
+    nv = V // block_v
+    budget = float((1 << precision) - V)
+
+    kernel = functools.partial(_cdf_kernel, block_v=block_v, nv=nv,
+                               budget=budget)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, 2, nv),
+        in_specs=[pl.BlockSpec((1, block_v), lambda b, p, j: (b, j))],
+        out_specs=pl.BlockSpec((1, block_v), lambda b, p, j: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((B, V), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),   # running max
+            pltpu.VMEM((1, 1), jnp.float32),   # running sum (scaled)
+            pltpu.VMEM((1, 1), jnp.float32),   # running prefix of cum prob
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; on CPU
+(this container) `interpret=True` executes the kernel bodies in Python for
+correctness, and the pure-jnp refs remain the default for anything
+performance-sensitive (tests select explicitly). The model zoo's XLA paths
+(models/layers.py) implement the same algorithms, so the dry-run HLO is
+structurally faithful to what the kernels do on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .ac_cdf import cdf_points as _cdf_points
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention as _flash_attention
+from .ssd_scan import ssd_intra as _ssd_intra
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(q, k, v, *, causal=True, window=None, impl="auto"):
+    """q (B,H,Sq,hd), k/v (B,K,Sk,hd). impl: auto|pallas|interpret|ref."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    interp = impl == "interpret" or not _on_tpu()
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def decode_attention(q, k_cache, v_cache, lengths, *, impl="auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    interp = impl == "interpret" or not _on_tpu()
+    return _decode_attention(q, k_cache, v_cache, lengths, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def ssd_intra(x, dt, A, Bm, Cm, *, impl="auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.ssd_intra_ref(x, dt, A, Bm, Cm)
+    interp = impl == "interpret" or not _on_tpu()
+    return _ssd_intra(x, dt, A, Bm, Cm, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("precision", "impl"))
+def cdf_points(logits, precision: int = 16, *, impl="auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+        return _ref.cdf_quantize_ref(p, precision)
+    interp = impl == "interpret" or not _on_tpu()
+    return _cdf_points(logits, precision, interpret=interp)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel. Deliberately naive and
+readable — the kernel tests assert_allclose against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q (B,H,Sq,hd), k/v (B,K,Sk,hd) -> (B,H,Sq,hd). GQA by head grouping."""
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = scale or hd ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q (B,H,hd); caches (B,K,S,hd); lengths (B,) valid prefix lengths.
+    -> (B,H,hd)."""
+    B, H, hd = q.shape
+    K, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    kk = jnp.repeat(k_cache, G, axis=1)
+    vv = jnp.repeat(v_cache, G, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * hd ** -0.5
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_ref(x, dt, A, Bm, Cm):
+    """Intra-chunk SSD (one chunk, zero entering state) + chunk state.
+
+    x (B,Q,H,P), dt (B,Q,H), A (H,), Bm/Cm (B,Q,N)
+    -> y (B,Q,H,P), state_out (B,H,P,N)
+    """
+    a = dt * A                                   # (B,Q,H) log decays
+    cum = jnp.cumsum(a, axis=1)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]
+    Q = x.shape[1]
+    ii, jj = jnp.meshgrid(jnp.arange(Q), jnp.arange(Q), indexing="ij")
+    L = jnp.exp(jnp.where((ii >= jj)[None, :, :, None], seg, -jnp.inf))
+    G = jnp.einsum("bin,bjn->bij", Cm, Bm)
+    W = G[..., None] * L
+    y = jnp.einsum("bijh,bjh,bjhp->bihp", W, dt, x)
+    end = jnp.exp(cum[:, -1:, :] - cum)
+    state = jnp.einsum("bjh,bjh,bjhp,bjn->bhpn", end, dt, x, Bm)
+    return y, state
+
+
+def cdf_quantize_ref(probs_unnorm, precision: int):
+    """Unnormalized probs (B, V) -> integer CDF interior points (B, V) by
+    cumulative rounding (matches core.cdf.quantize_cdf_points)."""
+    V = probs_unnorm.shape[-1]
+    budget = jnp.float32((1 << precision) - V)
+    cum = jnp.cumsum(probs_unnorm.astype(jnp.float32), axis=-1)
+    cum = cum / cum[..., -1:]
+    pts = jnp.floor(cum * budget + 0.5).astype(jnp.int32)
+    return pts + (1 + jnp.arange(V, dtype=jnp.int32))

@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api as model_api
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        n_img = cfg.n_img_tokens
+        return {"tokens": SDS((B, S - n_img), jnp.int32),
+                "img_embeds": SDS((B, n_img, cfg.d_model), dt)}
+    if cfg.family == "encdec":
+        return {"tokens": SDS((B, S), jnp.int32),
+                "frames": SDS((B, cfg.max_source_len, cfg.d_model), dt)}
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache_specs, prev_tokens_spec) for one serve_step with a KV cache of
+    seq_len tokens (SWA models physically hold only the window)."""
+    B, S = shape.global_batch, shape.seq_len
+    kw = {}
+    if cfg.family == "encdec":
+        kw["source_len"] = cfg.max_source_len
+    cache = jax.eval_shape(
+        lambda: model_api.init_cache(cfg, B, S, **kw))
+    prev = SDS((B,), jnp.int32)
+    return cache, prev
+
+
+def abstract_opt_state(params_abs, grad_compress: bool = False):
+    f32 = lambda p: SDS(p.shape, jnp.float32)
+    st = {"m": jax.tree_util.tree_map(f32, params_abs),
+          "v": jax.tree_util.tree_map(f32, params_abs),
+          "step": SDS((), jnp.int32)}
+    if grad_compress:
+        st["err"] = jax.tree_util.tree_map(f32, params_abs)
+    return st

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests see the
+single real device).
+
+Axes:
+  pod   — DCN-connected pods; data-parallel only (gradient all-reduce).
+  data  — ICI within a pod; batch + FSDP axis.
+  model — ICI; tensor / expert parallel axis.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes=None):
+    """Arbitrary mesh for tests / elastic configurations. `shape` may use -1
+    for one axis to absorb the remaining devices."""
+    shape = tuple(shape)
+    n = len(jax.devices())
+    if -1 in shape:
+        known = int(np.prod([s for s in shape if s != -1]))
+        shape = tuple(n // known if s == -1 else s for s in shape)
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):] if len(shape) <= 3 \
+            else tuple(f"ax{i}" for i in range(len(shape)))
+    return jax.make_mesh(shape, tuple(axes))
+
+
+def local_mesh():
+    """Single-device mesh (smoke tests, measured CPU runs)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_degree(mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.axis_names else 1

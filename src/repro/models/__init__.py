@@ -1,0 +1,2 @@
+from .api import (abstract_params, count_params, decode_step, forward,
+                  init_cache, init_params, loss_fn, module_for, param_axes)

@@ -1,0 +1,124 @@
+"""Zamba2-style hybrid: stacks of Mamba2 (SSD) layers with ONE shared
+attention+MLP block applied after every `hybrid_ssm_per_block` SSM layers
+(arXiv:2411.15242 — the shared block reuses the same weights at every
+application; each application keeps its own KV cache).
+
+Layout: n_layers SSM layers total. n_apply = n_layers // per_block shared-
+attention applications; leftover SSM layers (n_layers % per_block) run at
+the end. The main body is a nested scan: outer over groups (carrying the
+residual), inner over the group's SSM layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import rms_norm
+from .mamba2 import init_ssm_cache, ssm_block, ssm_decode_step
+from .transformer import (_decode_attn_one, dense_block, embed_tokens,
+                          lm_logits, scan_xs)
+
+
+def _split_layers(cfg: ModelConfig, layers):
+    per = cfg.hybrid_ssm_per_block
+    n_apply = cfg.n_layers // per
+    main = n_apply * per
+    grouped = jax.tree_util.tree_map(
+        lambda a: a[:main].reshape((n_apply, per) + a.shape[1:]), layers)
+    rest = jax.tree_util.tree_map(lambda a: a[main:], layers)
+    n_rest = cfg.n_layers - main
+    return grouped, rest, n_apply, n_rest
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, attn_impl="masked",
+            q_chunk=512, return_hidden=False, **_):
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    grouped, rest, n_apply, n_rest = _split_layers(cfg, params["layers"])
+    shared = params["shared_attn"]
+
+    def ssm_body(carry, lp):
+        return ssm_block(cfg, lp, carry), None
+
+    attn_fn = lambda h: dense_block(cfg, shared, h, positions=positions,
+                                    attn_impl=attn_impl, q_chunk=q_chunk)
+    if cfg.remat:
+        # remat per-layer, NOT per-group: checkpointing a scan-of-scan makes
+        # the 512-way SPMD backward blow up compile time (>20 min measured)
+        ssm_body = jax.checkpoint(ssm_body, prevent_cse=False)
+        attn_fn = jax.checkpoint(attn_fn, prevent_cse=False)
+
+    def group_body(carry, group_params):
+        h, _ = scan_xs(cfg, ssm_body, carry, group_params)
+        return attn_fn(h), None
+
+    x, _ = scan_xs(cfg, group_body, x, grouped)
+    if n_rest:
+        x, _ = scan_xs(cfg, ssm_body, x, rest)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    return lm_logits(cfg, params, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_apply = cfg.n_layers // cfg.hybrid_ssm_per_block
+    Kp, hd = cfg.padded_kv_heads, cfg.head_dim
+    c = init_ssm_cache(cfg, batch, cfg.n_layers, dtype)
+    c["k"] = jnp.zeros((n_apply, batch, max_len, Kp, hd), dtype)
+    c["v"] = jnp.zeros((n_apply, batch, max_len, Kp, hd), dtype)
+    c["pos"] = jnp.zeros((), jnp.int32)
+    return c
+
+
+def decode_step(params, cfg: ModelConfig, cache, prev_tokens, **_):
+    pos = cache["pos"]
+    x = embed_tokens(cfg, params, prev_tokens[:, None])
+    grouped, rest, n_apply, n_rest = _split_layers(cfg, params["layers"])
+    per = cfg.hybrid_ssm_per_block
+    main = n_apply * per
+    conv_g = jax.tree_util.tree_map(
+        lambda a: a[:main].reshape((n_apply, per) + a.shape[1:]),
+        cache["conv"])
+    state_g = jax.tree_util.tree_map(
+        lambda a: a[:main].reshape((n_apply, per) + a.shape[1:]),
+        cache["state"])
+    shared = params["shared_attn"]
+
+    def ssm_body(carry, xs):
+        lp, cs, ss = xs
+        h, cs, ss = ssm_decode_step(cfg, lp, carry, cs, ss)
+        return h, (cs, ss)
+
+    def group_body(carry, xs):
+        gp, cs, ss, kc, vc = xs
+        h, (cs, ss) = scan_xs(cfg, ssm_body, carry, (gp, cs, ss))
+        a, kc, vc = _decode_attn_one(
+            cfg, shared, rms_norm(h, shared["ln1"], cfg.norm_eps), kc, vc, pos)
+        h = h + a
+        from .layers import swiglu
+        h = h + swiglu(rms_norm(h, shared["ln2"], cfg.norm_eps),
+                       shared["wi_gate"], shared["wi_up"], shared["wo_mlp"])
+        return h, (cs, ss, kc, vc)
+
+    x, (conv_new, state_new, k_new, v_new) = scan_xs(
+        cfg, group_body, x, (grouped, conv_g, state_g, cache["k"], cache["v"]))
+    conv_out = [conv_new.reshape((main,) + conv_new.shape[2:])]
+    state_out = [state_new.reshape((main,) + state_new.shape[2:])]
+    if n_rest:
+        rest_conv = cache["conv"][main:]
+        rest_state = cache["state"][main:]
+        x, (rc, rs) = scan_xs(cfg, ssm_body, x, (rest, rest_conv, rest_state))
+        conv_out.append(rc)
+        state_out.append(rs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    new_cache = {
+        "conv": jnp.concatenate(conv_out, 0),
+        "state": jnp.concatenate(state_out, 0),
+        "k": k_new, "v": v_new, "pos": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,307 @@
+"""Core neural layers (pure JAX, shard-friendly).
+
+Attention comes in three interchangeable implementations:
+  * ``attention_masked``       — q-chunked online-softmax over the full KV
+                                 (baseline; causal mask applied, masked
+                                 positions still burn FLOPs — visible in the
+                                 roofline "useful FLOPs" ratio).
+  * ``attention_block_causal`` — triangular (q-chunk, kv-chunk) schedule that
+                                 only computes unmasked blocks (beyond-paper
+                                 perf iteration; ~2x FLOP cut at long S).
+  * Pallas flash kernel        — kernels/flash_attention.py (TPU target).
+
+All math in float32 accumulators, activations in cfg.dtype.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+# Trace-time mesh context: jit tracing does not expose the target mesh
+# (jax.sharding.get_abstract_mesh() is empty unless set_mesh is active),
+# so the step builders wrap their bodies in mesh_context(mesh) and shard()
+# reads it to emit constraints with only the axes that exist.
+_MESH_VAR = contextvars.ContextVar("repro_mesh", default=None)
+_LAYOUT_VAR = contextvars.ContextVar("repro_layout", default="train")
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, layout: str = "train"):
+    tok = _MESH_VAR.set(mesh)
+    tok2 = _LAYOUT_VAR.set(layout)
+    try:
+        yield
+    finally:
+        _MESH_VAR.reset(tok)
+        _LAYOUT_VAR.reset(tok2)
+
+
+def shard(x, *axes):
+    """Soft sharding hint against the mesh_context mesh. Axis names not in
+    the mesh are dropped (e.g. 'pod' on the single-pod mesh) — naming a
+    missing axis raises inside jit and a skipped constraint measurably
+    de-shards activations (batch replicated across 'data' in the backward;
+    found via 16x-inflated collective bytes in the dry-run)."""
+    mesh = _MESH_VAR.get()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def filt(a):
+        if isinstance(a, (tuple, list)):
+            t = tuple(x for x in a if x in names)
+            return t if t else None
+        return a if a in names else None
+
+    spec = P(*(filt(a) for a in axes))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+import os
+
+BF16_WIRE = os.environ.get("REPRO_BF16_WIRE", "0") == "1"
+EXPLICIT_TP = os.environ.get("REPRO_EXPLICIT_TP", "0") == "1"
+# EXPLICIT_TP: lower the TP down-projections (attention out, MLP down) with
+# an explicit shard_map (FSDP gather + local matmul + **bf16** psum). The
+# implicit-pjit path all-reduces the dot output, which on the CPU dry-run
+# backend is fp32 (bf16 dots lower to fp32) — 2x the wire bytes a TPU
+# lowering would move. Explicit collectives make the wire dtype a design
+# decision instead of a backend artifact. §Perf iteration I5.
+# When set, a barrier after each residual add stops XLA from hoisting the
+# rms_norm fp32 upcast above the TP all-reduce — activations cross the
+# wire in bf16 (2x fewer collective bytes). §Perf iteration I5.
+
+
+def residual_barrier(x):
+    if BF16_WIRE:
+        return jax.lax.optimization_barrier(x)
+    return x
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float = 1e6):
+    """Rotary embedding. x (..., S, H, hd), positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                                 # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def tp_down_proj(h, w, *, fsdp_axes=("embed",)):
+    """Down-projection contracting a TP-sharded inner dim.
+    h (B,S,F) sharded (batch, None, 'model'); w (F, D) sharded
+    ('model', 'data'). With EXPLICIT_TP and an active mesh: shard_map with
+    FSDP weight gather + local matmul + bf16 psum; otherwise plain einsum
+    (pjit inserts the all-reduce)."""
+    mesh = _MESH_VAR.get()
+    if not EXPLICIT_TP or mesh is None or "model" not in mesh.axis_names             or mesh.shape["model"] == 1:
+        return residual_barrier(jnp.einsum("bsf,fd->bsd", h, w))
+    from jax.experimental.shard_map import shard_map
+    names = set(mesh.axis_names)
+    ba = tuple(a for a in ("pod", "data") if a in names)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    bspec = ba if ba and h.shape[0] % nb == 0 else None
+    dp = mesh.shape.get("data", 1)
+    w_fsdp = ("data" in names and dp > 1 and w.shape[1] % dp == 0
+              and _LAYOUT_VAR.get() == "train")
+
+    def mapped(h_loc, w_loc):
+        if w_fsdp:
+            w_loc = jax.lax.all_gather(w_loc, "data", axis=1, tiled=True)
+        out = jnp.einsum("bsf,fd->bsd", h_loc, w_loc)
+        # wire dtype = model dtype (bf16 in production): the psum payload is
+        # an explicit design choice, not a backend lowering artifact
+        return jax.lax.psum(out.astype(h.dtype), "model")
+
+    return shard_map(
+        mapped, mesh=mesh,
+        in_specs=(P(bspec, None, "model"),
+                  P("model", "data" if w_fsdp else None)),
+        out_specs=P(bspec, None, None), check_rep=False)(h, w)
+
+
+def swiglu(x, w_gate, w_up, w_down, *, tp_axis="model"):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w_gate)) * \
+        jnp.einsum("bsd,df->bsf", x, w_up)
+    h = shard(h, ("pod", "data"), None, tp_axis)
+    return tp_down_proj(h, w_down)
+
+
+# --------------------------------------------------------------------- attn
+def _mask_bias(q_pos, k_pos, *, causal, window):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_masked(q, k, v, *, causal=True, window=None,
+                     q_offset=0, k_offset=0, q_chunk=512):
+    """Baseline attention: scan over q chunks, each attends the full KV with
+    an additive mask; online softmax keeps memory at O(q_chunk * Sk).
+
+    q (B,Sq,H,hd), k/v (B,Sk,K,hd), GQA via head grouping. Returns (B,Sq,H,hd).
+    """
+    B, Sq0, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, Sq0)
+    if Sq0 % qc:  # pad q rows; padded rows are sliced off the output
+        q = jnp.pad(q, ((0, 0), (0, qc - Sq0 % qc), (0, 0), (0, 0)))
+    Sq = q.shape[1]
+    n_chunks = max(1, Sq // qc)
+    qs = q.reshape(B, n_chunks, qc, K, G, hd)
+    k_pos = k_offset + jnp.arange(Sk)
+
+    def body(i):
+        qi = qs[:, i]                                               # (B,qc,K,G,hd)
+        q_pos = q_offset + i * qc + jnp.arange(qc)
+        bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale + bias
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+        o = o / jnp.sum(p, axis=-1)[..., None].transpose(0, 3, 1, 2, 4)
+        return o.astype(q.dtype)
+
+    out = jax.lax.map(body, jnp.arange(n_chunks))                   # (n,B,qc,K,G,hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+    return out[:, :Sq0]
+
+
+def attention_block_causal(q, k, v, *, causal=True, window=None,
+                           q_offset=0, k_offset=0, q_chunk=512):
+    """Block-sparse causal attention: a scan over only the (qi, kj) chunk
+    pairs that contain unmasked entries. Cuts the masked-dense FLOP waste
+    (~2x for causal, more for SWA). Online softmax across kv blocks.
+    Requires q_offset == k_offset == 0 (training/prefill use)."""
+    B, Sq0, H, hd = q.shape
+    _, Sk0, K, _ = k.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, Sq0)
+    if Sq0 % qc:
+        q = jnp.pad(q, ((0, 0), (0, qc - Sq0 % qc), (0, 0), (0, 0)))
+    if Sk0 % qc:
+        k = jnp.pad(k, ((0, 0), (0, qc - Sk0 % qc), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, qc - Sk0 % qc), (0, 0), (0, 0)))
+    Sq, Sk = q.shape[1], k.shape[1]
+    nq, nk = Sq // qc, Sk // qc
+
+    pairs = [(i, j) for i in range(nq) for j in range(nk)
+             if (not causal or j <= i)
+             and (not window or (i - j) * qc < window + qc)]
+    pairs = jnp.array(pairs, dtype=jnp.int32)                       # (npair, 2)
+
+    qs = q.reshape(B, nq, qc, K, G, hd)
+    ks = k.reshape(B, nk, qc, K, hd)
+    vs = v.reshape(B, nk, qc, K, hd)
+
+    def body(carry, pair):
+        m_all, l_all, acc_all = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qs, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(ks, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vs, j, 1, keepdims=False)
+        q_pos = i * qc + jnp.arange(qc)
+        k_pos = j * qc + jnp.arange(qc)
+        bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale + bias
+        m_i = jax.lax.dynamic_index_in_dim(m_all, i, 1, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l_all, i, 1, keepdims=False)
+        a_i = jax.lax.dynamic_index_in_dim(acc_all, i, 1, keepdims=False)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bkgqh", p, vj.astype(jnp.float32))
+        a_new = a_i * alpha[..., None] + o
+        m_all = jax.lax.dynamic_update_index_in_dim(m_all, m_new, i, 1)
+        l_all = jax.lax.dynamic_update_index_in_dim(l_all, l_new, i, 1)
+        acc_all = jax.lax.dynamic_update_index_in_dim(acc_all, a_new, i, 1)
+        return (m_all, l_all, acc_all), None
+
+    m0 = jnp.full((B, nq, K, G, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, K, G, qc), jnp.float32)
+    a0 = jnp.zeros((B, nq, K, G, qc, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), pairs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]                    # (B,nq,K,G,qc,hd)
+    out = jnp.moveaxis(out, 4, 2).reshape(B, Sq, H, hd)
+    return out[:, :Sq0].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None):
+    """Single-step attention over a preallocated KV cache.
+
+    q (B,1,H,hd); caches (B,S,K,hd); pos () int32 = index of the new token
+    (cache holds `pos` valid entries at [0..pos-1] plus the new one at pos).
+    """
+    B, _, H, hd = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    idx = jnp.arange(S)
+    valid = idx <= pos
+    if window:
+        valid &= idx > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention_dense(q, k, v, *, causal=True, window=None,
+                    q_offset=0, k_offset=0, q_chunk=None):
+    """Loop-free masked attention (single einsum chain). Used by the
+    dry-run COST PROBES: XLA's HloCostAnalysis counts while-loop bodies
+    once, so probes must not contain loops. Memory-naive (materializes
+    S x S scores) — never used on a real workload path."""
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    s = jnp.einsum("bqkgh,bskh->bkgqs",
+                   q.reshape(B, Sq, K, G, hd).astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    bias = _mask_bias(q_offset + jnp.arange(Sq), k_offset + jnp.arange(Sk),
+                      causal=causal, window=window)
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+ATTN_IMPLS = {
+    "masked": attention_masked,
+    "block_causal": attention_block_causal,
+    "dense": attention_dense,
+}

@@ -1,0 +1,380 @@
+"""Dense decoder-only transformer (llama/qwen family) with scan-over-layers,
+remat, GQA, RoPE, qk-norm, and sliding-window attention.
+
+The attention + MLP block functions here are reused by the MoE, hybrid,
+encoder-decoder and VLM families.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .layers import (ATTN_IMPLS, decode_attention, residual_barrier,
+                     rms_norm, rope, shard, swiglu, tp_down_proj, NEG_INF)
+
+
+# ------------------------------------------------------------ shared blocks
+def attn_block(cfg: ModelConfig, lp: dict, x, *, positions,
+               attn_impl="masked", prefix="", kv_override=None,
+               causal=True, q_chunk=512):
+    """Pre-norm attention block (residual applied by caller).
+    kv_override: (k, v, kv_positions) for cross-attention."""
+    B, S, D = x.shape
+    hd, Hp, Kp = cfg.head_dim, cfg.padded_heads, cfg.padded_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, lp[f"w{prefix}q"]).reshape(B, S, Hp, hd)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dh->bsh", x, lp[f"w{prefix}k"]).reshape(B, S, Kp, hd)
+        v = jnp.einsum("bsd,dh->bsh", x, lp[f"w{prefix}v"]).reshape(B, S, Kp, hd)
+        kv_positions = positions
+    else:
+        k, v, kv_positions = kv_override
+    if cfg.qk_norm and not prefix:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    if positions is not None:  # rotary (None => absolute/sinusoidal handled outside)
+        q = rope(q, positions, cfg.rope_theta)
+        if kv_override is None:
+            k = rope(k, kv_positions, cfg.rope_theta)
+    q = shard(q, ("pod", "data"), None, "model", None)
+    k = shard(k, ("pod", "data"), None, None, None)
+    impl = ATTN_IMPLS[attn_impl]
+    o = impl(q, k, v, causal=causal, window=cfg.sliding_window, q_chunk=q_chunk)
+    o = o.reshape(B, S, Hp * hd)
+    return tp_down_proj(o, lp[f"w{prefix}o"]), (k, v)
+
+
+def dense_block(cfg: ModelConfig, lp: dict, x, *, positions,
+                attn_impl="masked", q_chunk=512, causal=True):
+    a, _ = attn_block(cfg, lp, rms_norm(x, lp["ln1"], cfg.norm_eps),
+                      positions=positions, attn_impl=attn_impl,
+                      q_chunk=q_chunk, causal=causal)
+    x = residual_barrier(x + a)
+    x = residual_barrier(
+        x + swiglu(rms_norm(x, lp["ln2"], cfg.norm_eps),
+                   lp["wi_gate"], lp["wi_up"], lp["wo_mlp"]))
+    return x
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return shard(x, ("pod", "data"), None, None)
+
+
+def lm_logits(cfg: ModelConfig, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = shard(logits, ("pod", "data"), None, "model")
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padding ids
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, NEG_INF, logits.astype(jnp.float32)).astype(logits.dtype)
+    return logits
+
+
+def scan_xs(cfg: ModelConfig, body, carry, xs):
+    """lax.scan when cfg.scan_layers else an unrolled Python loop (cost
+    probes need loop-free HLO — see launch/dryrun.py)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _scan_blocks(cfg: ModelConfig, layers_params, x, block_fn):
+    """Scan `block_fn(x, layer_params) -> x` over stacked layers with remat."""
+    def body(carry, lp):
+        return block_fn(carry, lp), None
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, layers_params)
+    else:
+        L = jax.tree_util.tree_leaves(layers_params)[0].shape[0]
+        for i in range(L):
+            lp = jax.tree_util.tree_map(lambda a: a[i], layers_params)
+            x, _ = body(x, lp)
+    return x
+
+
+# ------------------------------------------------------------------ forward
+def forward(params, cfg: ModelConfig, batch: dict, *,
+            attn_impl="masked", q_chunk=512, return_hidden=False):
+    """Teacher-forced scoring: batch['tokens'] (B,S) -> logits (B,S,Vp).
+    logits[:, t] predicts tokens[:, t+1] (standard causal LM convention;
+    the compressor adapter handles the BOS shift)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        img = batch["img_embeds"].astype(x.dtype)   # (B, n_img, D) stub frontend
+        x = jnp.concatenate([img, x], axis=1)
+        S = x.shape[1]
+    positions = jnp.arange(S)
+    block = partial(dense_block, cfg, positions=positions,
+                    attn_impl=attn_impl, q_chunk=q_chunk)
+    x = _scan_blocks(cfg, params["layers"],
+                     x, lambda h, lp: block(lp, h))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        x = x[:, batch["img_embeds"].shape[1]:]     # only text positions score
+    if return_hidden:
+        return x
+    return lm_logits(cfg, params, x)
+
+
+# -------------------------------------------------------------------- cache
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """KV cache. kv_cache_dtype="int8" stores quantized K/V with per-
+    (position, head) fp16 scales — halves decode HBM traffic vs bf16
+    (§Perf iteration; decompression is decode/memory-bound). Losslessness
+    is unaffected: compressor and decompressor run the same program."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    L, Kp, hd = cfg.n_layers, cfg.padded_kv_heads, cfg.head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((L, batch, S, Kp, hd), jnp.int8),
+            "v": jnp.zeros((L, batch, S, Kp, hd), jnp.int8),
+            "k_scale": jnp.zeros((L, batch, S, Kp), jnp.float16),
+            "v_scale": jnp.zeros((L, batch, S, Kp), jnp.float16),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((L, batch, S, Kp, hd), dtype),
+        "v": jnp.zeros((L, batch, S, Kp, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _quant_kv(x):
+    """x (B,1,K,hd) -> (int8, fp16 scale (B,1,K))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) + 1e-8
+    scale = (amax / 127.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _dequant_kv(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def _cache_slot(cfg: ModelConfig, pos, cache_len):
+    """Physical slot for absolute position `pos` (ring buffer under SWA)."""
+    return pos % cache_len if cfg.sliding_window else pos
+
+
+def _use_seq_sharded_decode(cfg):
+    """Flash-decode combine applies when the cache seq dim is TP-sharded
+    (KV heads don't divide TP) — see cache_pspecs."""
+    from .layers import _MESH_VAR, _LAYOUT_VAR, EXPLICIT_TP
+    mesh = _MESH_VAR.get()
+    explicit = EXPLICIT_TP or _LAYOUT_VAR.get() == "serve"
+    if not explicit or mesh is None or "model" not in mesh.axis_names:
+        return None
+    tp = mesh.shape["model"]
+    if tp == 1 or cfg.padded_kv_heads % tp == 0 or cfg.sliding_window:
+        return None
+    return mesh
+
+
+def _seq_sharded_decode_attn(cfg, mesh, q, k_new, v_new, kc, vc, pos,
+                             scales=None):
+    """Flash-decode over a SEQUENCE-sharded KV cache (KV heads don't divide
+    TP, e.g. kv=8 on model=16). shard_map: each model shard updates its
+    local slice, computes a partial online softmax, and partials combine
+    with a log-sum-exp psum — O(B·H·hd) wire bytes instead of XLA's
+    cache-sized gather (§Perf iteration C2). Returns (o, kc, vc, scales)."""
+    from jax.experimental.shard_map import shard_map
+    B, _, Hp, hd = q.shape
+    S = kc.shape[1]
+    tp = mesh.shape["model"]
+    S_loc = S // tp
+    names = set(mesh.axis_names)
+    ba = tuple(a for a in ("pod", "data") if a in names)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    bspec = ba if ba and B % nb == 0 else None
+    int8 = scales is not None
+
+    def mapped(q, k_new, v_new, kc_loc, vc_loc, *sc):
+        shard = jax.lax.axis_index("model")
+        in_mine = (pos >= shard * S_loc) & (pos < (shard + 1) * S_loc)
+        slot_loc = jnp.where(in_mine, pos - shard * S_loc, 0)
+
+        def upd4(c, n):
+            return jnp.where(in_mine, jax.lax.dynamic_update_slice(
+                c, n.astype(c.dtype), (0, slot_loc, 0, 0)), c)
+
+        def upd3(c, n):
+            return jnp.where(in_mine, jax.lax.dynamic_update_slice(
+                c, n.astype(c.dtype), (0, slot_loc, 0)), c)
+
+        if int8:
+            ks_loc, vs_loc = sc
+            kq, k_sc = _quant_kv(k_new)
+            vq, v_sc = _quant_kv(v_new)
+            kc_loc, vc_loc = upd4(kc_loc, kq), upd4(vc_loc, vq)
+            ks_loc, vs_loc = upd3(ks_loc, k_sc), upd3(vs_loc, v_sc)
+            k_eff = _dequant_kv(kc_loc, ks_loc)
+            v_eff = _dequant_kv(vc_loc, vs_loc)
+        else:
+            kc_loc, vc_loc = upd4(kc_loc, k_new), upd4(vc_loc, v_new)
+            k_eff, v_eff = kc_loc, vc_loc
+        K = k_eff.shape[2]
+        G = Hp // K
+        qg = q[:, 0].reshape(-1, K, G, hd)
+        s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                       k_eff.astype(jnp.float32)) / jnp.sqrt(float(hd))
+        idx = shard * S_loc + jnp.arange(S_loc)
+        s = jnp.where((idx <= pos)[None, None, None, :], s, NEG_INF)
+        m_loc = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m_loc)
+        l_loc = jnp.sum(p, axis=-1, keepdims=True)
+        o_loc = jnp.einsum("bkgs,bskh->bkgh", p, v_eff.astype(jnp.float32))
+        m_g = jax.lax.pmax(m_loc, "model")
+        w = jnp.exp(m_loc - m_g)                 # (b,K,G,1)
+        l = jax.lax.psum(l_loc * w, "model")     # (b,K,G,1)
+        o = jax.lax.psum(o_loc * w, "model")     # (b,K,G,hd)
+        o = o / jnp.maximum(l, 1e-30)
+        out = o.reshape(-1, 1, Hp, hd).astype(q.dtype)
+        if int8:
+            return out, kc_loc, vc_loc, ks_loc, vs_loc
+        return out, kc_loc, vc_loc
+
+    kv_spec = P(bspec, "model", None, None)
+    sc_spec = P(bspec, "model", None)
+    q_spec = P(bspec, None, None, None)
+    if int8:
+        o, kc, vc, ks, vs = shard_map(
+            mapped, mesh=mesh,
+            in_specs=(q_spec, q_spec, q_spec, kv_spec, kv_spec,
+                      sc_spec, sc_spec),
+            out_specs=(q_spec, kv_spec, kv_spec, sc_spec, sc_spec),
+            check_rep=False)(q, k_new, v_new, kc, vc, *scales)
+        return o, kc, vc, (ks, vs)
+    o, kc, vc = shard_map(
+        mapped, mesh=mesh,
+        in_specs=(q_spec, q_spec, q_spec, kv_spec, kv_spec),
+        out_specs=(q_spec, kv_spec, kv_spec),
+        check_rep=False)(q, k_new, v_new, kc, vc)
+    return o, kc, vc, None
+
+
+def _decode_attn_one(cfg, lp, x, kc, vc, pos, prefix="", scales=None):
+    """One-token attention vs. a (B,S,K,hd) cache; returns out, new kc/vc
+    (+ new scales when the cache is int8-quantized)."""
+    B, _, D = x.shape
+    hd, Hp, Kp = cfg.head_dim, cfg.padded_heads, cfg.padded_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, lp[f"w{prefix}q"]).reshape(B, 1, Hp, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, lp[f"w{prefix}k"]).reshape(B, 1, Kp, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, lp[f"w{prefix}v"]).reshape(B, 1, Kp, hd)
+    if cfg.qk_norm and not prefix:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = rope(q, pos[None], cfg.rope_theta)
+    k = rope(k, pos[None], cfg.rope_theta)
+    S = kc.shape[1]
+    mesh_ss = _use_seq_sharded_decode(cfg) if not prefix else None
+    if mesh_ss is not None:
+        o, kc, vc, new_scales = _seq_sharded_decode_attn(
+            cfg, mesh_ss, q, k, v, kc, vc, pos, scales=scales)
+        o = o.reshape(B, 1, Hp * hd)
+        out = tp_down_proj(o, lp[f"w{prefix}o"])
+        if scales is not None:
+            return out, kc, vc, new_scales
+        return out, kc, vc
+    slot = _cache_slot(cfg, pos, S)
+    new_scales = None
+    if scales is not None:      # int8 cache path
+        ks, vs = scales
+        kq, k_sc = _quant_kv(k)
+        vq, v_sc = _quant_kv(v)
+        kc = jax.lax.dynamic_update_slice(kc, kq, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vq, (0, slot, 0, 0))
+        ks = jax.lax.dynamic_update_slice(ks, k_sc, (0, slot, 0))
+        vs = jax.lax.dynamic_update_slice(vs, v_sc, (0, slot, 0))
+        new_scales = (ks, vs)
+        k_eff = _dequant_kv(kc, ks).astype(x.dtype)
+        v_eff = _dequant_kv(vc, vs).astype(x.dtype)
+    else:
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        k_eff, v_eff = kc, vc
+    if cfg.sliding_window:
+        # ring buffer: slot s holds abs position pos - ((pos - s) mod S); valid if >= 0
+        s_idx = jnp.arange(S)
+        abs_pos = pos - jnp.mod(pos - s_idx, S)
+        o = _ring_attention(q, k_eff, v_eff, abs_pos >= 0)
+    else:
+        o = decode_attention(q, k_eff, v_eff, pos)
+    o = o.reshape(B, 1, Hp * hd)
+    out = tp_down_proj(o, lp[f"w{prefix}o"])
+    if scales is not None:
+        return out, kc, vc, new_scales
+    return out, kc, vc
+
+
+def _ring_attention(q, kc, vc, valid):
+    B, _, H, hd = q.shape
+    _, S, K, _ = kc.shape
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, vc.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def decode_step(params, cfg: ModelConfig, cache, prev_tokens):
+    """One autoregressive step: (cache, prev (B,)) -> (logits (B,Vp), cache)."""
+    pos = cache["pos"]
+    x = embed_tokens(cfg, params, prev_tokens[:, None])
+
+    int8 = cfg.kv_cache_dtype == "int8"
+
+    def body(carry, xs):
+        h = carry
+        if int8:
+            lp, kc, vc, ks, vs = xs
+            a, kc, vc, (ks, vs) = _decode_attn_one(
+                cfg, lp, rms_norm(h, lp["ln1"], cfg.norm_eps), kc, vc, pos,
+                scales=(ks, vs))
+        else:
+            lp, kc, vc = xs
+            a, kc, vc = _decode_attn_one(
+                cfg, lp, rms_norm(h, lp["ln1"], cfg.norm_eps), kc, vc, pos)
+        h = h + a
+        h = h + swiglu(rms_norm(h, lp["ln2"], cfg.norm_eps),
+                       lp["wi_gate"], lp["wi_up"], lp["wo_mlp"])
+        return h, (kc, vc, ks, vs) if int8 else (kc, vc)
+
+    if int8:
+        x, (k_new, v_new, ks_new, vs_new) = scan_xs(
+            cfg, body, x, (params["layers"], cache["k"], cache["v"],
+                           cache["k_scale"], cache["v_scale"]))
+    else:
+        x, (k_new, v_new) = scan_xs(
+            cfg, body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    if int8:
+        new_cache["k_scale"] = ks_new
+        new_cache["v_scale"] = vs_new
+    return logits, new_cache

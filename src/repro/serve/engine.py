@@ -1,0 +1,126 @@
+"""Serving engine: batched prefill (scoring) + lock-step decode.
+
+This is the inference side of the paper's system. `ModelPredictor`
+implements core.compressor.PredictorAdapter over any model-zoo config:
+
+  * score_chunks — one jitted teacher-forced forward over (B, C) chunks
+    (prefill-shaped; on the production mesh this is the pjit `score_step`).
+  * decode loop — jitted single-token step with a donated cache.
+
+The BOS convention: the model input for chunk tokens x_0..x_{C-1} is
+[BOS, x_0, .., x_{C-2}], so logits[t] parameterizes P(x_t | x_<t) with a
+fresh context per chunk — exactly the paper's chunked setup (§5.4).
+
+For MoE models both paths run dropless dispatch (see models/moe.py) so
+scoring and decoding produce bit-identical distributions — the lossless
+requirement.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api as model_api
+
+
+class ModelPredictor:
+    """PredictorAdapter over the model zoo (single-host execution)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, bos_id: int | None = None,
+                 extra_batch: dict | None = None, mesh=None):
+        self.params = params
+        self.cfg = cfg
+        self.vocab_size = cfg.vocab_size
+        self.bos_id = bos_id if bos_id is not None else cfg.vocab_size - 1
+        self.extra_batch = extra_batch or {}
+        self.mesh = mesh
+        fam_kw = {"dropless": True} if cfg.family == "moe" else {}
+        if cfg.family == "moe" and mesh is not None:
+            fam_kw["mesh"] = mesh
+
+        @jax.jit
+        def _score(params, tokens, extra):
+            inp = jnp.concatenate(
+                [jnp.full((tokens.shape[0], 1), self.bos_id, tokens.dtype),
+                 tokens[:, :-1]], axis=1)
+            batch = {"tokens": inp, **extra}
+            logits = model_api.forward(params, cfg, batch, **fam_kw)
+            return logits[..., :cfg.vocab_size]
+
+        @jax.jit
+        def _decode(params, cache, prev, extra):
+            logits, cache = model_api.decode_step(params, cfg, cache, prev,
+                                                  **fam_kw)
+            return logits[..., :cfg.vocab_size], cache
+
+        self._score = _score
+        self._decode = _decode
+
+    # --------------------------------------------------- PredictorAdapter
+    def score_chunks(self, tokens: np.ndarray) -> np.ndarray:
+        tokens = jnp.asarray(tokens, jnp.int32)
+        return np.asarray(
+            self._score(self.params, tokens, self.extra_batch))
+
+    def begin_decode(self, batch: int):
+        max_len = getattr(self, "_decode_max_len", 1024)
+        cache = model_api.init_cache(self.cfg, batch, max_len)
+        if self.cfg.family == "encdec" and "frames" in self.extra_batch:
+            from repro.models.encdec import precompute_cross_kv
+            frames = self.extra_batch["frames"]
+            if frames.shape[0] != batch:
+                frames = jnp.broadcast_to(
+                    frames[:1], (batch,) + frames.shape[1:])
+            cache["xk"], cache["xv"] = precompute_cross_kv(
+                self.params, self.cfg, frames)
+        return cache
+
+    def set_decode_len(self, n: int):
+        self._decode_max_len = int(n)
+
+    def decode_step(self, state, prev_tokens: np.ndarray):
+        logits, state = self._decode(self.params, state,
+                                     jnp.asarray(prev_tokens, jnp.int32),
+                                     self.extra_batch)
+        return np.asarray(logits), state
+
+    # ----------------------------------------------------------- sampling
+    def generate(self, n_tokens: int, batch: int = 1, *, temperature=1.0,
+                 top_k: int = 0, seed: int = 0, prompt=None,
+                 vocab_limit: int = 0):
+        """Autoregressive sampling — used to create 'LLM-generated' corpora
+        for the paper's experiments. vocab_limit > 0 restricts sampling to
+        ids < vocab_limit (e.g. 256 for raw bytes, excluding PAD/BOS)."""
+        key = jax.random.PRNGKey(seed)
+        plen = 0 if prompt is None else np.asarray(prompt).shape[-1]
+        self.set_decode_len(max(n_tokens, 16) + plen)
+        cache = self.begin_decode(batch)
+        prev = np.full((batch,), self.bos_id, np.int32)
+        if prompt is not None:
+            prompt = np.asarray(prompt, np.int32)
+            if prompt.ndim == 1:  # shared prompt
+                prompt = np.tile(prompt, (batch, 1))
+            for t in range(prompt.shape[1]):
+                _, cache = self.decode_step(cache, prev)
+                prev = prompt[:, t]
+        out = np.zeros((batch, n_tokens), np.int32)
+        for t in range(n_tokens):
+            logits, cache = self.decode_step(cache, prev)
+            key, sub = jax.random.split(key)
+            lg = jnp.asarray(logits) / max(temperature, 1e-4)
+            if vocab_limit:
+                lg = jnp.where(jnp.arange(lg.shape[-1]) < vocab_limit,
+                               lg, -1e30)
+            if top_k:
+                vals, idx = jax.lax.top_k(lg, top_k)
+                choice = jax.random.categorical(sub, vals, axis=-1)
+                tok = jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0]
+            else:
+                tok = jax.random.categorical(sub, lg, axis=-1)
+            prev = np.asarray(tok, np.int32)
+            out[:, t] = prev
+        return out

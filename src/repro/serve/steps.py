@@ -1,0 +1,149 @@
+"""Production serve steps for the compression system.
+
+score_step  — prefill-shaped: tokens (B,S) -> (topk ids (B,S,K),
+              quantized pmf (B,S,K+1)). The vocab-sized logits are never
+              materialized for the whole sequence: the LM head + softmax +
+              top-K + CDF quantization run per position-block (lax.map), so
+              peak logits memory is B × s_blk × V.
+
+serve_step  — decode-shaped: (params, cache, prev (B,)) -> (ids (B,K),
+              qpmf (B,K+1), cache). One new token against a seq_len cache;
+              this is the decompression inner loop and the `decode_*` /
+              `long_*` dry-run cells.
+
+Both emit (ids, quantized pmf) — integers for the host arithmetic coder —
+rather than logits, which is the TPU/host interface of the system
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.cdf import topk_quantized
+from repro.models import api as model_api
+from repro.models.transformer import lm_logits
+from repro.sharding.specs import (batch_pspecs, cache_pspecs, param_pspecs)
+
+
+def _tok_batch_axes(mesh, b: int):
+    """Batch mesh axes for the topk shard_map — only when divisible."""
+    from repro.launch.mesh import batch_axes
+    ba = batch_axes(mesh)
+    n = 1
+    for a in ba:
+        n *= mesh.shape[a]
+    return ba if ba and b % n == 0 else ()
+
+
+def _fam_kw(cfg: ModelConfig, mesh):
+    kw = {}
+    if cfg.family == "moe":
+        kw["dropless"] = True
+        if mesh is not None and "model" in mesh.axis_names and \
+                mesh.shape["model"] > 1:
+            kw["mesh"] = mesh
+    return kw
+
+
+def make_score_step(cfg: ModelConfig, mesh=None, *, topk: int = 64,
+                    precision: int = 16, attn_impl: str = "masked",
+                    s_block: int = 2048, global_batch: int = 1,
+                    q_chunk: int = 512, sharded_topk: bool = True):
+    """sharded_topk=True uses the hierarchical shard_map top-K
+    (§Perf iteration I4): plain lax.top_k over vocab-sharded logits makes
+    XLA all-gather full fp32 logits — measured 600+ GiB on prefill_32k."""
+    fam_kw = _fam_kw(cfg, mesh)
+    if cfg.family == "moe":
+        fam_kw["dispatch_group"] = 2048
+    use_sharded = (sharded_topk and mesh is not None
+                   and "model" in mesh.axis_names
+                   and cfg.padded_vocab % mesh.shape["model"] == 0)
+
+    def score_step(params, batch):
+        from repro.models.layers import mesh_context
+        layout = "serve" if cfg.family != "moe" else "train"
+        with mesh_context(mesh, layout=layout):
+            return _score_body(params, batch)
+
+    def _score_body(params, batch):
+        hidden = model_api.forward(params, cfg, batch, attn_impl=attn_impl,
+                                   q_chunk=q_chunk, return_hidden=True,
+                                   **fam_kw)
+        B, S, D = hidden.shape
+        sb = min(s_block, S)
+        pad = (-S) % sb
+        if pad:  # e.g. VLM: text positions = seq_len - n_img_tokens
+            hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        Sp = hidden.shape[1]
+        blocks = jnp.moveaxis(hidden.reshape(B, Sp // sb, sb, D), 1, 0)
+
+        def blk(h):
+            logits = lm_logits(cfg, params, h)
+            if use_sharded:
+                from repro.core.cdf import topk_quantized_sharded
+                return topk_quantized_sharded(
+                    logits, topk, precision, mesh,
+                    batch_axes=_tok_batch_axes(mesh, logits.shape[0]))
+            return topk_quantized(logits, topk, precision)
+
+        ids, qpmf = jax.lax.map(blk, blocks)
+        ids = jnp.moveaxis(ids, 0, 1).reshape(B, Sp, topk)[:, :S]
+        qpmf = jnp.moveaxis(qpmf, 0, 1).reshape(B, Sp, topk + 1)[:, :S]
+        return ids, qpmf
+
+    if mesh is None:
+        return jax.jit(score_step)
+    bspecs = batch_pspecs(cfg, mesh, global_batch=global_batch)
+    sh = lambda s: NamedSharding(mesh, s)
+    score_layout = "serve" if cfg.family != "moe" else "train"
+    pspecs = jax.tree_util.tree_map(
+        sh, param_pspecs(cfg, mesh, layout=score_layout))
+    out_b = bspecs["tokens"][0]
+    return jax.jit(
+        score_step,
+        in_shardings=(pspecs, {k: sh(v) for k, v in bspecs.items()}),
+        out_shardings=(sh(P(out_b, None, None)), sh(P(out_b, None, None))),
+    )
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, *, batch: int,
+                    topk: int = 64, precision: int = 16,
+                    donate: bool = True, sharded_topk: bool = True):
+    fam_kw = _fam_kw(cfg, mesh)
+    use_sharded = (sharded_topk and mesh is not None
+                   and "model" in mesh.axis_names
+                   and cfg.padded_vocab % mesh.shape["model"] == 0)
+
+    def serve_step(params, cache, prev):
+        from repro.models.layers import mesh_context
+        with mesh_context(mesh, layout="serve"):
+            logits, cache = model_api.decode_step(params, cfg, cache, prev,
+                                                  **fam_kw)
+            if use_sharded:
+                from repro.core.cdf import topk_quantized_sharded
+                ids, qpmf = topk_quantized_sharded(
+                    logits, topk, precision, mesh,
+                    batch_axes=_tok_batch_axes(mesh, logits.shape[0]))
+            else:
+                ids, qpmf = topk_quantized(logits, topk, precision)
+            return ids, qpmf, cache
+
+    if mesh is None:
+        return jax.jit(serve_step, donate_argnums=(1,) if donate else ())
+    sh = lambda s: NamedSharding(mesh, s)
+    pspecs = jax.tree_util.tree_map(
+        sh, param_pspecs(cfg, mesh, layout="serve"))
+    cspecs = jax.tree_util.tree_map(sh, cache_pspecs(cfg, mesh, batch=batch))
+    bspec = batch_pspecs(cfg, mesh, global_batch=batch)["tokens"][0]
+    return jax.jit(
+        serve_step,
+        in_shardings=(pspecs, cspecs, sh(P(bspec))),
+        out_shardings=(sh(P(bspec, None)), sh(P(bspec, None)), cspecs),
+        donate_argnums=(1,) if donate else (),
+    )

@@ -1,0 +1,47 @@
+"""Int8 gradient compression with error feedback.
+
+At 1000+ nodes the cross-pod (DCN) gradient all-reduce is the slow link;
+8-bit quantization cuts it 4× vs fp32 (2× vs bf16). Error feedback keeps
+the *accumulated* quantization error bounded, preserving convergence
+(1-bit Adam / PowerSGD lineage).
+
+On a real multi-pod deployment the quantize/dequantize pair brackets the
+cross-pod reduce-scatter (quantize -> int8 a2a/reduce -> dequantize); under
+single-program pjit the reduce is implicit, so the training loop applies
+the identical numerical transform at the same point in the dataflow —
+convergence behaviour (what we can measure here) is identical, link-bytes
+accounting for the roofline uses the int8 width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, err_state):
+    """Apply int8 round-trip with error feedback per leaf.
+    Returns (effective_grads, new_err_state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq, g32 - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))

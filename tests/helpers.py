@@ -1,0 +1,36 @@
+"""Shared tiny-config builders for tests."""
+import jax
+
+from repro.configs.base import ModelConfig
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=257, head_pad_multiple=1, vocab_pad_multiple=1,
+            dtype="float32", remat=False)
+
+
+def tiny(family="dense", **kw):
+    base = dict(BASE)
+    if family == "moe":
+        base.update(n_experts=4, top_k=2)
+    if family in ("ssm", "hybrid"):
+        base.update(ssm_state=16, ssm_headdim=16, ssm_chunk=8)
+    if family == "hybrid":
+        base.update(n_layers=3, hybrid_ssm_per_block=1)
+    if family == "encdec":
+        base.update(n_enc_layers=2, max_source_len=8)
+    if family == "vlm":
+        base.update(n_img_tokens=4)
+    base.update(kw)
+    return ModelConfig(name=f"tiny-{family}", family=family, **base)
+
+
+def rand_batch(cfg, B=2, S=16, key=0):
+    import jax.numpy as jnp
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(k, (B, cfg.n_img_tokens,
+                                                    cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(k, (B, 8, cfg.d_model))
+    return batch

@@ -1,0 +1,68 @@
+"""Property tests for the arithmetic coder + CDF quantization (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ac
+from repro.core.cdf import pmf_to_cdf, quantize_cdf_points, quantize_pmf
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 200), st.integers(1, 120), st.integers(0, 10_000))
+def test_roundtrip_random_cdfs(vocab, n, seed):
+    rng = np.random.default_rng(seed)
+    syms = rng.integers(0, vocab, n)
+    cdfs = []
+    enc = ac.ArithmeticEncoder()
+    for s in syms:
+        pmf = rng.random(vocab) + 1e-4
+        q = np.asarray(quantize_pmf(pmf / pmf.sum(), 16))
+        cdf = pmf_to_cdf(q)
+        cdfs.append(cdf)
+        enc.encode(int(s), cdf)
+    blob = enc.finish()
+    dec = ac.ArithmeticDecoder(blob)
+    assert [dec.decode(c) for c in cdfs] == list(syms)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 2000), st.integers(0, 10_000), st.integers(12, 20))
+def test_quantization_invariants(vocab, seed, precision):
+    if (1 << precision) <= vocab:
+        return
+    rng = np.random.default_rng(seed)
+    pmf = rng.random(vocab) ** 4 + 1e-9  # peaky
+    pmf /= pmf.sum()
+    pts = np.asarray(quantize_cdf_points(pmf, precision))
+    assert pts[-1] == 1 << precision          # exact total
+    assert (np.diff(pts) >= 1).all()           # every symbol codable
+    assert pts[0] >= 1
+    q = np.asarray(quantize_pmf(pmf, precision))
+    assert q.sum() == 1 << precision and q.min() >= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_skewed_distribution_efficiency(seed):
+    """Measured bits within 3% + 32 bits of the quantized entropy."""
+    rng = np.random.default_rng(seed)
+    pmf = np.array([0.97, 0.01, 0.01, 0.01])
+    n = 2000
+    syms = rng.choice(4, n, p=pmf)
+    cdf = pmf_to_cdf(np.asarray(quantize_pmf(pmf, 16)))
+    enc = ac.ArithmeticEncoder()
+    for s in syms:
+        enc.encode(int(s), cdf)
+    bits = len(enc.finish()) * 8
+    counts = np.bincount(syms, minlength=4)
+    q = np.diff(cdf) / cdf[-1]
+    ideal = -(counts * np.log2(q)).sum()
+    assert bits <= ideal * 1.03 + 32
+
+
+def test_uniform_cdf_escape_path():
+    cdf = ac.uniform_cdf(1000)
+    enc = ac.ArithmeticEncoder()
+    for s in (0, 999, 123):
+        enc.encode(s, cdf)
+    dec = ac.ArithmeticDecoder(enc.finish())
+    assert [dec.decode(cdf) for _ in range(3)] == [0, 999, 123]
