@@ -1,0 +1,140 @@
+"""Host entropy-coder micro-benchmark: reference AC vs. batched rANS.
+
+The model runs on the accelerator; the host coder is what bounds
+end-to-end tokens/s (ROADMAP north star). This benchmark isolates that
+cost: encode+decode throughput of the two backends over identical
+quantized 16-bit CDF sequences at decode-batch sizes B ∈ {1, 16, 64}.
+
+The AC is a per-stream Python loop, so its throughput is flat in B; the
+interleaved rANS coder advances all B stream states with a handful of
+numpy ufuncs per position, so its per-token cost falls ~linearly with B.
+
+  PYTHONPATH=src python benchmarks/coder_bench.py [--smoke]
+
+Prints ``name,us_per_call,derived`` CSV rows (same convention as
+benchmarks/run.py) plus a human-readable table, and exits non-zero if
+batched rANS at B=64 fails the >= 5x encode+decode speedup criterion —
+so CI regresses loudly, not silently.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path[:0] = ["src", "."]
+
+PRECISION = 16
+ALPHABET = 33            # top-K=32 + escape slot: the production shape
+BATCHES = (1, 16, 64)
+
+
+def _rand_cdfs(rng, n_pos, alphabet, precision):
+    """(n_pos, alphabet+1) int64 quantized CDFs, total == 2**precision."""
+    pmf = rng.random((n_pos, alphabet)) ** 4 + 1e-6      # peaky, LLM-like
+    budget = (1 << precision) - alphabet
+    q = np.floor(pmf / pmf.sum(-1, keepdims=True) * budget).astype(np.int64) + 1
+    q[np.arange(n_pos), q.argmax(-1)] += (1 << precision) - q.sum(-1)
+    cdfs = np.zeros((n_pos, alphabet + 1), np.int64)
+    np.cumsum(q, axis=-1, out=cdfs[:, 1:])
+    return cdfs
+
+
+def _sample(rng, cdfs):
+    """One symbol per position, drawn from its quantized distribution."""
+    total = cdfs[0, -1]
+    u = rng.integers(0, total, cdfs.shape[0])
+    return (np.sum(cdfs[:, :-1] <= u[:, None], axis=1) - 1).astype(np.int64)
+
+
+def bench_ac(cdfs, syms, B):
+    """AC codes the B streams one after another (its only mode)."""
+    from repro.core import ac
+    T = cdfs.shape[1]
+    t0 = time.perf_counter()
+    blobs = []
+    for b in range(B):
+        enc = ac.ArithmeticEncoder()
+        for t in range(T):
+            enc.encode(int(syms[b, t]), cdfs[b, t])
+        blobs.append(enc.finish())
+    t_enc = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for b in range(B):
+        dec = ac.ArithmeticDecoder(blobs[b])
+        out = [dec.decode(cdfs[b, t]) for t in range(T)]
+        assert out == list(syms[b]), "AC round-trip failure"
+    t_dec = time.perf_counter() - t0
+    return t_enc, t_dec, sum(len(x) for x in blobs)
+
+
+def bench_rans(cdfs, syms, B):
+    """Interleaved rANS: one vectorized coder step per position."""
+    from repro.core import rans
+    T = cdfs.shape[1]
+    t0 = time.perf_counter()
+    enc = rans.BatchedRansEncoder(B)
+    for t in range(T):
+        enc.put_symbols(syms[:, t], cdfs[:, t], PRECISION)
+    blobs = enc.finish()
+    t_enc = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dec = rans.BatchedRansDecoder(blobs)
+    out = np.empty((B, T), np.int64)
+    for t in range(T):
+        out[:, t] = dec.get(cdfs[:, t], PRECISION)
+    t_dec = time.perf_counter() - t0
+    assert np.array_equal(out, syms), "rANS round-trip failure"
+    return t_enc, t_dec, sum(len(x) for x in blobs)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny streams: correctness + CSV shape only")
+    ap.add_argument("--tokens", type=int, default=0,
+                    help="override tokens per stream")
+    args = ap.parse_args()
+    T = args.tokens or (200 if args.smoke else 4000)
+    rng = np.random.default_rng(0)
+
+    print(f"# coder_bench: alphabet={ALPHABET} precision={PRECISION} "
+          f"tokens/stream={T}")
+    print(f"{'B':>4} {'ac_ksym/s':>10} {'rans_ksym/s':>12} {'speedup':>8} "
+          f"{'ac_B':>8} {'rans_B':>8}")
+    csv_rows = []
+    speedup_64 = 0.0
+    for B in BATCHES:
+        cdfs = np.stack([_rand_cdfs(rng, T, ALPHABET, PRECISION)
+                         for _ in range(B)])
+        syms = np.stack([_sample(rng, cdfs[b]) for b in range(B)])
+        ac_enc, ac_dec, ac_bytes = bench_ac(cdfs, syms, B)
+        rn_enc, rn_dec, rn_bytes = bench_rans(cdfs, syms, B)
+        n = B * T
+        ac_ks = n / (ac_enc + ac_dec) / 1e3
+        rn_ks = n / (rn_enc + rn_dec) / 1e3
+        speedup = rn_ks / ac_ks
+        if B == 64:
+            speedup_64 = speedup
+        print(f"{B:>4} {ac_ks:>10.0f} {rn_ks:>12.0f} {speedup:>7.1f}x "
+              f"{ac_bytes:>8} {rn_bytes:>8}")
+        csv_rows.append(
+            f"coder_bench_B{B},{(ac_enc + ac_dec + rn_enc + rn_dec) / n * 1e6:.2f},"
+            f"ac_ksym_s={ac_ks:.0f};rans_ksym_s={rn_ks:.0f};"
+            f"speedup={speedup:.1f}")
+    print("\n# CSV (name,us_per_call,derived)")
+    for row in csv_rows:
+        print(row)
+    if args.smoke:
+        return 0
+    if speedup_64 < 5.0:
+        print(f"FAIL: rANS speedup at B=64 is {speedup_64:.1f}x < 5x",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

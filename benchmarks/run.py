@@ -241,9 +241,11 @@ def fig8_domain_models(quick=False):
 
 
 def coder_throughput(quick=False):
-    """Host arithmetic-coder + CDF-pipeline throughput (the system's
-    TPU/host interface cost)."""
-    from repro.core import ac
+    """Host entropy-coder + CDF-pipeline throughput (the system's
+    TPU/host interface cost): reference AC vs. batched interleaved rANS
+    at the production decode-batch size (see benchmarks/coder_bench.py
+    for the full B-sweep)."""
+    from repro.core import ac, rans
     from repro.core.cdf import pmf_to_cdf, quantize_pmf, topk_quantized_jit
     import jax.numpy as jnp
     rng = np.random.default_rng(0)
@@ -262,6 +264,25 @@ def coder_throughput(quick=False):
     out = [dec.decode(cdf) for _ in range(n)]
     t_dec = time.time() - t0
     assert out == list(syms)
+    # batched rANS: same total token count spread over B=64 streams
+    B = 64
+    bsyms = syms[:n - n % B].reshape(B, -1)
+    bcdf = np.broadcast_to(cdf, (B,) + cdf.shape)
+    t0 = time.time()
+    renc = rans.BatchedRansEncoder(B)
+    for t in range(bsyms.shape[1]):
+        renc.put_symbols(bsyms[:, t], bcdf, 16)
+    rblobs = renc.finish()
+    r_enc = time.time() - t0
+    t0 = time.time()
+    rdec = rans.BatchedRansDecoder(rblobs)
+    rout = np.empty_like(bsyms)
+    for t in range(bsyms.shape[1]):
+        rout[:, t] = rdec.get(bcdf, 16)
+    r_dec = time.time() - t0
+    assert np.array_equal(rout, bsyms)
+    rn = bsyms.size
+    speedup = (rn / (r_enc + r_dec)) / (n / (t_enc + t_dec))
     lg = jnp.asarray(rng.normal(size=(64, 4096)).astype(np.float32))
     topk_quantized_jit(lg, 64, 16)  # warm
     t0 = time.time()
@@ -270,10 +291,15 @@ def coder_throughput(quick=False):
     t_cdf = (time.time() - t0) / 20
     print("\n== coder_throughput ==")
     print(f"AC encode {n/t_enc/1e3:.0f} ksym/s | decode {n/t_dec/1e3:.0f} "
-          f"ksym/s | topk-CDF (64x4096) {t_cdf*1e3:.2f} ms/call")
+          f"ksym/s | rANS(B=64) encode {rn/r_enc/1e3:.0f} ksym/s | decode "
+          f"{rn/r_dec/1e3:.0f} ksym/s ({speedup:.1f}x) | "
+          f"topk-CDF (64x4096) {t_cdf*1e3:.2f} ms/call")
     _csv("coder_throughput", t_enc / n * 1e6,
-         f"enc_ksym_s={n/t_enc/1e3:.0f};dec_ksym_s={n/t_dec/1e3:.0f}")
-    return {"enc_sym_s": n / t_enc, "dec_sym_s": n / t_dec}
+         f"enc_ksym_s={n/t_enc/1e3:.0f};dec_ksym_s={n/t_dec/1e3:.0f};"
+         f"rans_enc_ksym_s={rn/r_enc/1e3:.0f};"
+         f"rans_dec_ksym_s={rn/r_dec/1e3:.0f};rans_speedup={speedup:.1f}")
+    return {"enc_sym_s": n / t_enc, "dec_sym_s": n / t_dec,
+            "rans_enc_sym_s": rn / r_enc, "rans_dec_sym_s": rn / r_dec}
 
 
 ALL = [table2_information, table3_traditional, table5_main, fig_chunk_size,

@@ -1,8 +1,11 @@
 """End-to-end driver: losslessly compress/decompress any file with a
 trained predictor (the paper's system as a CLI tool).
 
-  PYTHONPATH=src:. python examples/compress_file.py compress  IN OUT.llmc
+  PYTHONPATH=src:. python examples/compress_file.py compress  IN OUT.llmc [codec]
   PYTHONPATH=src:. python examples/compress_file.py decompress IN.llmc OUT
+
+codec: rans (default) or ac. Decompression reads the codec from the
+container header, so the argument only matters when compressing.
 """
 import sys
 import time
@@ -16,8 +19,10 @@ def main():
     from repro.data.tokenizer import decode, encode
 
     mode, src, dst = sys.argv[1], sys.argv[2], sys.argv[3]
+    codec = sys.argv[4] if len(sys.argv) > 4 else "rans"
     pred = predictor("pred-base")
-    comp = LLMCompressor(pred, chunk_size=128, topk=48, decode_batch=32)
+    comp = LLMCompressor(pred, chunk_size=128, topk=48, decode_batch=32,
+                         codec=codec)
     data = open(src, "rb").read()
     t0 = time.time()
     if mode == "compress":

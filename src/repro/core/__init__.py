@@ -1,12 +1,14 @@
 """Core of the paper's contribution: LLM next-token prediction as the
-probability model for lossless arithmetic coding."""
+probability model for lossless entropy coding (arithmetic or rANS)."""
 from .ac import ArithmeticDecoder, ArithmeticEncoder, uniform_cdf
 from .cdf import (coding_cost_bits, logits_to_cdf, pmf_to_cdf,
                   quantize_pmf, topk_quantized)
 from .compressor import CompressionStats, LLMCompressor, PredictorAdapter
+from .rans import BatchedRansDecoder, BatchedRansEncoder
 
 __all__ = [
     "ArithmeticDecoder", "ArithmeticEncoder", "uniform_cdf",
+    "BatchedRansDecoder", "BatchedRansEncoder",
     "coding_cost_bits", "logits_to_cdf", "pmf_to_cdf", "quantize_pmf",
     "topk_quantized", "CompressionStats", "LLMCompressor", "PredictorAdapter",
 ]

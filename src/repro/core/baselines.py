@@ -14,7 +14,13 @@ import lzma as _lzma
 from collections import Counter, defaultdict
 
 import numpy as np
-import zstandard as _zstd
+
+try:  # optional baseline — the [test] extra pulls it in, core never needs it
+    import zstandard as _zstd
+    HAVE_ZSTD = True
+except ImportError:
+    _zstd = None
+    HAVE_ZSTD = False
 
 from . import ac
 from .cdf import pmf_to_cdf
@@ -30,6 +36,10 @@ def lzma_ratio(data: bytes) -> float:
 
 
 def zstd_ratio(data: bytes, level: int = 22) -> float:
+    if not HAVE_ZSTD:
+        raise RuntimeError(
+            "zstd baseline requires the 'zstandard' package "
+            "(pip install zstandard)")
     return len(data) / len(_zstd.ZstdCompressor(level=level).compress(data))
 
 
@@ -119,6 +129,13 @@ ALL_BASELINES = {
 }
 
 
+def available_baselines() -> list[str]:
+    return [n for n in ALL_BASELINES if n != "zstd22" or HAVE_ZSTD]
+
+
 def run_baselines(data: bytes, names=None) -> dict[str, float]:
-    names = names or list(ALL_BASELINES)
+    """Ratios for the requested baselines. With no explicit ``names``,
+    unavailable optional backends (zstd) are silently skipped; naming one
+    explicitly raises so a typo can't masquerade as a result."""
+    names = names or available_baselines()
     return {n: round(ALL_BASELINES[n](data), 3) for n in names}

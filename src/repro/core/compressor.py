@@ -8,12 +8,12 @@ what makes the workload batchable:
 
 * **compress** — one teacher-forced scoring pass over a (B, C) batch of
   chunks (a prefill-shaped pjit computation) yields P(x_t | x_<t) for every
-  position; each actual token is then arithmetic-coded with its quantized
-  CDF. Model cost: one forward pass per C tokens.
+  position; each actual token is then entropy-coded with its quantized CDF.
+  Model cost: one forward pass per C tokens.
 
 * **decompress** — B chunks are decoded in lock-step: one `decode_step`
   (serve-shaped computation, KV/SSM cache) per position for the whole
-  batch; the arithmetic decoder picks each stream's next token from the
+  batch; the entropy decoder picks each stream's next token from the
   model CDF, which is then fed back as the next input.
 
 Losslessness requires the *same* quantized CDFs on both sides. Both sides
@@ -23,12 +23,27 @@ instead of re-generating, §4.4 — we make the determinism explicit).
 
 Beyond-paper: top-K + escape coding (see core/cdf.py) bounds host-coder
 work per token at K+1 instead of |V|, at a measured ~0 ratio cost for
-well-predicted text (escapes coded uniformly over V remain lossless).
+well-predicted text (escapes coded uniformly remain lossless).
 
-Container format (little-endian):
+Entropy backends (DESIGN.md §7)
+-------------------------------
+Two host coders share the container:
+
+* ``codec="rans"`` (id 1, default) — batched interleaved rANS
+  (core/rans.py): all B chunk-streams advance through ONE vectorized
+  coder step per token position. This is the production path; host cost
+  per token is a few numpy ufuncs amortized over the batch.
+* ``codec="ac"`` (id 0) — the reference Witten–Neal–Cleary arithmetic
+  coder (core/ac.py): per-stream Python loops, kept as the legacy /
+  cross-check backend and for decoding v2 archives.
+
+Container format (little-endian), version 3:
   magic 'LLMC' | u8 version | u8 flags | u16 chunk_size | u32 n_tokens
-  u32 vocab | u16 topk (0 => full vocab) | u8 precision
-  then per chunk: varint byte-length + AC stream.
+  u32 vocab | u16 topk (0 => full vocab) | u8 precision | u8 codec
+  then per chunk: varint byte-length + codec stream.
+Version 2 (seed format) lacks the codec byte and is always AC; the
+decoder still accepts it — the codec actually used for decode comes from
+the container, not from this object's configuration.
 """
 from __future__ import annotations
 
@@ -38,12 +53,19 @@ from typing import Callable, Protocol
 
 import numpy as np
 
-from . import ac
+from . import ac, rans
 from .cdf import (DEFAULT_PRECISION, build_topk_cdfs, logits_to_cdf,
                   pmf_to_cdf, topk_quantized_jit)
 
 MAGIC = b"LLMC"
-VERSION = 2
+VERSION = 3
+_V2_HEADER = "<BBHIIHB"          # seed header (no codec byte)
+_V3_HEADER = "<BBHIIHBB"
+
+CODEC_AC = 0
+CODEC_RANS = 1
+CODEC_IDS = {"ac": CODEC_AC, "rans": CODEC_RANS}
+CODEC_NAMES = {v: k for k, v in CODEC_IDS.items()}
 
 
 class PredictorAdapter(Protocol):
@@ -104,22 +126,34 @@ class CompressionStats:
 
 
 class LLMCompressor:
-    """Chunked LLM-predictor + arithmetic-coding lossless compressor."""
+    """Chunked LLM-predictor + entropy-coding lossless compressor."""
 
     def __init__(self, predictor: PredictorAdapter, *,
                  chunk_size: int = 256,
                  topk: int = 0,
                  precision: int = DEFAULT_PRECISION,
-                 decode_batch: int = 64):
+                 decode_batch: int = 64,
+                 codec: str = "rans"):
         if topk and topk >= predictor.vocab_size:
             topk = 0
+        if codec not in CODEC_IDS:
+            raise ValueError(f"unknown codec {codec!r} "
+                             f"(choose from {sorted(CODEC_IDS)})")
         self.predictor = predictor
         self.chunk_size = int(chunk_size)
         self.topk = int(topk)
         self.precision = int(precision)
         self.decode_batch = int(decode_batch)
+        self.codec = codec
         if (1 << precision) <= (topk + 1 if topk else predictor.vocab_size):
             raise ValueError("precision too small for alphabet")
+        # only the rANS backend caps precision (AC handles up to 30 bits);
+        # decoding a foreign-codec container never hits the encoder limit
+        if codec == "rans" and precision > rans.MAX_PRECISION:
+            raise ValueError(f"precision {precision} exceeds rANS coder "
+                             f"limit {rans.MAX_PRECISION}")
+        # escape symbols: AC codes exactly over V; rANS over 2**esc_bits >= V
+        self._esc_bits = rans.uniform_bits(predictor.vocab_size)
 
     # ------------------------------------------------------------- compress
     def compress(self, tokens: np.ndarray, *,
@@ -157,9 +191,9 @@ class LLMCompressor:
         out = bytearray()
         flags = 1 if self.topk else 0
         out += MAGIC
-        out += struct.pack("<BBHIIHB", VERSION, flags, C, n,
+        out += struct.pack(_V3_HEADER, VERSION, flags, C, n,
                            self.predictor.vocab_size, self.topk,
-                           self.precision)
+                           self.precision, CODEC_IDS[self.codec])
         stats.header_bytes = len(out) + 0
         body = bytearray()
         for s in streams:
@@ -185,24 +219,86 @@ class LLMCompressor:
             prev = batch[:, t]
         return logits
 
+    # -------------------------------------------------------------- encode
+    def _valid_lengths(self, B, chunk_offset, n_total) -> np.ndarray:
+        C = self.chunk_size
+        return np.array([min(C, max(0, n_total - (chunk_offset + b) * C))
+                         for b in range(B)], dtype=np.int64)
+
     def _encode_batch(self, batch, logits, chunk_offset, n_total, stats):
-        V = self.predictor.vocab_size
+        self._accumulate_ideal_bits(batch, logits, chunk_offset, n_total,
+                                    stats)
+        if self.codec == "rans":
+            return self._encode_batch_rans(batch, logits, chunk_offset,
+                                           n_total, stats)
+        return self._encode_batch_ac(batch, logits, chunk_offset,
+                                     n_total, stats)
+
+    def _accumulate_ideal_bits(self, batch, logits, chunk_offset, n_total,
+                               stats):
         lp = logits.astype(np.float64)
         lp -= lp.max(axis=-1, keepdims=True)
-        lse = np.log(np.exp(lp).sum(axis=-1, keepdims=True))
+        lse = np.log(np.exp(lp).sum(axis=-1))
+        tok_lp = np.take_along_axis(lp, batch[..., None].astype(np.int64),
+                                    axis=-1)[..., 0]
+        valid = self._valid_lengths(batch.shape[0], chunk_offset, n_total)
+        m = np.arange(batch.shape[1])[None, :] < valid[:, None]
+        stats.ideal_bits += float(((lse - tok_lp) * m).sum() / np.log(2.0))
+
+    def _encode_batch_rans(self, batch, logits, chunk_offset, n_total,
+                           stats):
+        """All B chunk-streams advance through one vectorized coder step
+        per token position: vectorized top-K slot lookup, masked escape
+        steps, and a single LIFO flush in finish()."""
+        B, C = batch.shape
+        valid = self._valid_lengths(B, chunk_offset, n_total)
+        enc = rans.BatchedRansEncoder(B)
+        pos = np.arange(C)[None, :] < valid[:, None]          # (B, C) active
+        if self.topk:
+            ids, qpmf = topk_quantized_jit(logits, self.topk, self.precision)
+            ids, cdfs = build_topk_cdfs(ids, qpmf)            # (B,C,K),(B,C,K+2)
+            match = ids == batch[..., None]
+            has = match.any(axis=-1)
+            slots = np.where(has, match.argmax(axis=-1), self.topk)
+            starts = np.take_along_axis(cdfs, slots[..., None],
+                                        axis=-1)[..., 0]
+            ends = np.take_along_axis(cdfs, slots[..., None] + 1,
+                                      axis=-1)[..., 0]
+            stats.n_escapes += int((~has & pos).sum())
+            for t in range(C):
+                m = pos[:, t]
+                if not m.any():
+                    break
+                enc.put(starts[:, t], ends[:, t] - starts[:, t],
+                        self.precision, m)
+                em = m & ~has[:, t]
+                if em.any():
+                    enc.put_uniform(batch[:, t], self._esc_bits, em)
+        else:
+            # per-position CDFs: a (B, C, V+1) int64 tensor would be tens
+            # of GB at production vocab sizes, so quantize one (B, V+1)
+            # slab per step — same shape the decode path uses
+            for t in range(C):
+                m = pos[:, t]
+                if not m.any():
+                    break
+                cdfs = logits_to_cdf(logits[:, t], self.precision)
+                enc.put_symbols(batch[:, t].astype(np.int64), cdfs,
+                                self.precision, m)
+        return enc.finish()
+
+    def _encode_batch_ac(self, batch, logits, chunk_offset, n_total, stats):
+        """Legacy per-stream arithmetic-coding loops (reference codec)."""
+        V = self.predictor.vocab_size
         streams = []
         if self.topk:
             ids, qpmf = topk_quantized_jit(logits, self.topk, self.precision)
             ids, cdfs = build_topk_cdfs(ids, qpmf)
+        valid = self._valid_lengths(batch.shape[0], chunk_offset, n_total)
         for b in range(batch.shape[0]):
-            chunk_idx = chunk_offset + b
-            start = chunk_idx * self.chunk_size
-            valid = min(self.chunk_size, max(0, n_total - start))
             enc = ac.ArithmeticEncoder()
-            for t in range(valid):
+            for t in range(int(valid[b])):
                 sym = int(batch[b, t])
-                stats.ideal_bits += float(
-                    (lse[b, t, 0] - lp[b, t, sym]) / np.log(2.0))
                 if self.topk:
                     slot = np.nonzero(ids[b, t] == sym)[0]
                     if slot.size:
@@ -214,21 +310,31 @@ class LLMCompressor:
                 else:
                     cdf = logits_to_cdf(logits[b, t], self.precision)
                     enc.encode(sym, cdf)
-            streams.append(enc.finish() if valid else b"")
+            streams.append(enc.finish() if valid[b] else b"")
         return streams
 
     # ----------------------------------------------------------- decompress
     def decompress(self, blob: bytes) -> np.ndarray:
         if blob[:4] != MAGIC:
             raise ValueError("bad magic")
-        version, flags, C, n, vocab, topk, precision = struct.unpack(
-            "<BBHIIHB", blob[4:4 + struct.calcsize("<BBHIIHB")])
-        if version != VERSION:
+        version = blob[4]
+        if version == 2:
+            hdr = _V2_HEADER
+            _, flags, C, n, vocab, topk, precision = struct.unpack(
+                hdr, blob[4:4 + struct.calcsize(hdr)])
+            codec = CODEC_AC          # v2 archives predate the codec byte
+        elif version == VERSION:
+            hdr = _V3_HEADER
+            (_, flags, C, n, vocab, topk, precision,
+             codec) = struct.unpack(hdr, blob[4:4 + struct.calcsize(hdr)])
+            if codec not in CODEC_NAMES:
+                raise ValueError(f"unknown codec id {codec}")
+        else:
             raise ValueError(f"unsupported version {version}")
         if vocab != self.predictor.vocab_size or C != self.chunk_size \
                 or topk != self.topk or precision != self.precision:
             raise ValueError("compressor configuration mismatch with container")
-        pos = 4 + struct.calcsize("<BBHIIHB")
+        pos = 4 + struct.calcsize(hdr)
         n_chunks = max(1, -(-n // C))
         streams = []
         for _ in range(n_chunks):
@@ -239,21 +345,63 @@ class LLMCompressor:
         B = self.decode_batch
         for i in range(0, n_chunks, B):
             group = streams[i:i + B]
-            dec_tokens = self._decode_group(group, C, n, i)
+            dec_tokens = self._decode_group(group, C, n, i, codec)
             out[i * C:(i + len(group)) * C] = dec_tokens.ravel()
         return out[:n]
 
-    def _decode_group(self, streams, C, n_total, chunk_offset):
-        V = self.predictor.vocab_size
-        B = len(streams)
-        decoders = [ac.ArithmeticDecoder(s) for s in streams]
-        valid = np.array([min(C, max(0, n_total - (chunk_offset + b) * C))
-                          for b in range(B)], dtype=np.int32)
-        tokens = np.zeros((B, C), dtype=np.int32)
+    def _decode_group(self, streams, C, n_total, chunk_offset, codec: int):
+        if codec == CODEC_RANS:
+            return self._decode_group_rans(streams, C, n_total, chunk_offset)
+        return self._decode_group_ac(streams, C, n_total, chunk_offset)
+
+    def _begin_group(self, B, C):
         if hasattr(self.predictor, "set_decode_len"):
             self.predictor.set_decode_len(C)
         state = self.predictor.begin_decode(B)
         prev = np.full((B,), self.predictor.bos_id, dtype=np.int32)
+        return state, prev
+
+    def _decode_group_rans(self, streams, C, n_total, chunk_offset):
+        """Lock-step batched decode: one model step + one vectorized coder
+        step (plus a masked escape step) per token position."""
+        B = len(streams)
+        valid = self._valid_lengths(B, chunk_offset, n_total)
+        dec = rans.BatchedRansDecoder(streams)
+        tokens = np.zeros((B, C), dtype=np.int32)
+        state, prev = self._begin_group(B, C)
+        for t in range(int(valid.max(initial=0))):
+            logits, state = self.predictor.decode_step(state, prev)
+            logits = np.asarray(logits)
+            m = valid > t
+            if self.topk:
+                ids, qpmf = topk_quantized_jit(logits, self.topk,
+                                               self.precision)
+                ids = np.asarray(ids)
+                cdfs = pmf_to_cdf(np.asarray(qpmf))            # (B, K+2)
+                slots = dec.get(cdfs, self.precision, m)
+                esc = m & (slots == self.topk)
+                syms = np.take_along_axis(
+                    ids, np.minimum(slots, self.topk - 1)[:, None],
+                    axis=-1)[:, 0].astype(np.int64)
+                if esc.any():
+                    u = dec.get_uniform(self._esc_bits, esc)
+                    syms = np.where(esc, u, syms)
+            else:
+                cdfs = logits_to_cdf(logits, self.precision)   # (B, V+1)
+                syms = dec.get(cdfs, self.precision, m)
+            nxt = np.where(m, syms, 0).astype(np.int32)
+            tokens[:, t] = nxt
+            prev = nxt
+        return tokens
+
+    def _decode_group_ac(self, streams, C, n_total, chunk_offset):
+        """Legacy per-stream arithmetic decode (reference codec + v2)."""
+        V = self.predictor.vocab_size
+        B = len(streams)
+        decoders = [ac.ArithmeticDecoder(s) for s in streams]
+        valid = self._valid_lengths(B, chunk_offset, n_total)
+        tokens = np.zeros((B, C), dtype=np.int32)
+        state, prev = self._begin_group(B, C)
         for t in range(int(valid.max(initial=0))):
             logits, state = self.predictor.decode_step(state, prev)
             logits = np.asarray(logits)

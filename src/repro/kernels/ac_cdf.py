@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -85,7 +87,7 @@ def cdf_points(logits, precision: int, *, block_v=2048, interpret=False):
             pltpu.VMEM((1, 1), jnp.float32),   # running sum (scaled)
             pltpu.VMEM((1, 1), jnp.float32),   # running prefix of cum prob
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(logits)

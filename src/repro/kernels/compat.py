@@ -1,0 +1,12 @@
+"""JAX version compatibility for the Pallas TPU kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(jax >= 0.5); this container pins 0.4.x. Resolve the name once here so
+every kernel works under either spelling.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")

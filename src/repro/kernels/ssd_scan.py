@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, s_ref):
     x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)  (head-major layout)
@@ -73,7 +75,7 @@ def ssd_intra(x, dt, A, Bm, Cm, *, interpret=False):
             jax.ShapeDtypeStruct((B, H, Q, P), jnp.float32),
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(A.astype(jnp.float32), xh, dth, Bm, Cm)

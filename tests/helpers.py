@@ -1,5 +1,6 @@
 """Shared tiny-config builders for tests."""
 import jax
+import numpy as np
 
 from repro.configs.base import ModelConfig
 
@@ -22,6 +23,42 @@ def tiny(family="dense", **kw):
         base.update(n_img_tokens=4)
     base.update(kw)
     return ModelConfig(name=f"tiny-{family}", family=family, **base)
+
+
+class GoldenPredictor:
+    """Deterministic, model-free PredictorAdapter for golden-container tests.
+
+    Next-token logits are a fixed (V, V) table indexed by the previous
+    token, so both the teacher-forced and incremental scoring paths
+    produce bit-identical distributions with no jitted model involved.
+    The table is well-separated (scaled normals) so CDF quantization is
+    robust to float rounding differences across BLAS builds.
+    """
+
+    def __init__(self, vocab_size=64, seed=0):
+        self.vocab_size = int(vocab_size)
+        self.bos_id = self.vocab_size - 1
+        rng = np.random.default_rng(seed)
+        self._table = (rng.standard_normal(
+            (self.vocab_size, self.vocab_size)) * 2.0).astype(np.float32)
+
+    def score_chunks(self, tokens):
+        tokens = np.asarray(tokens, np.int32)
+        prev = np.concatenate(
+            [np.full((tokens.shape[0], 1), self.bos_id, np.int32),
+             tokens[:, :-1]], axis=1)
+        return self._table[prev]
+
+    def begin_decode(self, batch):
+        return None
+
+    def decode_step(self, state, prev_tokens):
+        return self._table[np.asarray(prev_tokens, np.int32)], state
+
+
+def golden_tokens(n=45, seed=1234, vocab=63):
+    """The fixed token stream the golden containers were built from."""
+    return np.random.default_rng(seed).integers(0, vocab, n).astype(np.int32)
 
 
 def rand_batch(cfg, B=2, S=16, key=0):

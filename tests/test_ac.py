@@ -1,6 +1,6 @@
 """Property tests for the arithmetic coder + CDF quantization (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import ac
 from repro.core.cdf import pmf_to_cdf, quantize_cdf_points, quantize_pmf

@@ -32,6 +32,42 @@ def test_roundtrip_families(family):
     assert stats.n_tokens == data.size
 
 
+@pytest.mark.parametrize("codec", ["ac", "rans"])
+def test_roundtrip_codecs(codec):
+    """Both entropy backends round-trip the same model; the container
+    advertises the codec and the sizes agree to per-chunk overhead."""
+    pred = _pred("dense")
+    rng = np.random.default_rng(7)
+    data = rng.integers(0, 256, 200).astype(np.int32)
+    comp = LLMCompressor(pred, chunk_size=32, topk=16, decode_batch=4,
+                         codec=codec)
+    blob, _ = comp.compress(data)
+    assert blob[19] == {"ac": 0, "rans": 1}[codec]
+    assert np.array_equal(comp.decompress(blob), data)
+
+
+def test_codecs_cross_decode_via_container():
+    """A compressor configured for one codec decodes a container written
+    by the other — the codec travels in the header, not the object."""
+    pred = _pred("dense")
+    rng = np.random.default_rng(11)
+    data = rng.integers(0, 256, 90).astype(np.int32)
+    ac_comp = LLMCompressor(pred, chunk_size=32, topk=16, decode_batch=4,
+                            codec="ac")
+    rans_comp = LLMCompressor(pred, chunk_size=32, topk=16, decode_batch=4,
+                              codec="rans")
+    assert np.array_equal(rans_comp.decompress(ac_comp.compress(data)[0]),
+                          data)
+    assert np.array_equal(ac_comp.decompress(rans_comp.compress(data)[0]),
+                          data)
+
+
+def test_unknown_codec_rejected():
+    pred = _pred("dense")
+    with pytest.raises(ValueError):
+        LLMCompressor(pred, chunk_size=32, codec="huffman")
+
+
 def test_roundtrip_full_vocab_path():
     pred = _pred("dense")
     rng = np.random.default_rng(1)

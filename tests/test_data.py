@@ -1,6 +1,6 @@
 """Data pipeline determinism + tokenizer + entropy analysis tools."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.entropy import analyze
 from repro.data.pipeline import TokenPipeline

@@ -1,0 +1,71 @@
+"""Golden-container regression: frozen byte blobs guard the format.
+
+``tests/golden/`` holds containers produced by known-good code:
+
+* ``v2_*.llmc`` — written by the SEED compressor (container version 2,
+  implicit AC codec, no codec byte). Frozen forever; they can no longer
+  be regenerated, which is the point — new code must keep decoding old
+  archives bit-exactly.
+* ``v3_*.llmc`` — written by the current compressor (codec byte: 0=AC,
+  1=rANS). Encode must stay byte-stable: any container-format or coder
+  drift shows up as a byte diff here before it silently corrupts
+  archives in the wild.
+
+All goldens use the deterministic, model-free ``GoldenPredictor`` and
+the fixed ``golden_tokens`` streams (tests/helpers.py), so no model
+weights are involved.
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+from helpers import GoldenPredictor, golden_tokens
+from repro.core import LLMCompressor
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+
+# name -> (constructor kwargs, token stream)
+CASES = {
+    "v2_topk.llmc": (dict(topk=8), golden_tokens()),
+    "v2_full.llmc": (dict(topk=0), golden_tokens(37, seed=77)),
+    "v3_rans_topk.llmc": (dict(topk=8, codec="rans"), golden_tokens()),
+    "v3_rans_full.llmc": (dict(topk=0, codec="rans"),
+                          golden_tokens(37, seed=77)),
+    "v3_ac_topk.llmc": (dict(topk=8, codec="ac"), golden_tokens()),
+}
+
+
+def _comp(kw):
+    return LLMCompressor(GoldenPredictor(), chunk_size=16, decode_batch=4,
+                         **kw)
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_decodes(name):
+    """Every checked-in container — seed v2 and current v3, both codecs —
+    decodes to its original token stream through the current path."""
+    kw, toks = CASES[name]
+    blob = (GOLDEN / name).read_bytes()
+    assert np.array_equal(_comp(kw).decompress(blob), toks)
+
+
+@pytest.mark.parametrize("name", [n for n in sorted(CASES)
+                                  if n.startswith("v3")])
+def test_v3_encode_byte_stable(name):
+    """Re-encoding the golden inputs must reproduce the golden bytes."""
+    kw, toks = CASES[name]
+    blob, _ = _comp(kw).compress(toks)
+    assert blob == (GOLDEN / name).read_bytes()
+
+
+def test_v2_header_shape_frozen():
+    """The v2 goldens really are version-2, codec-less containers."""
+    for name in ("v2_topk.llmc", "v2_full.llmc"):
+        blob = (GOLDEN / name).read_bytes()
+        assert blob[:4] == b"LLMC" and blob[4] == 2
+
+
+def test_v3_header_carries_codec():
+    assert (GOLDEN / "v3_rans_topk.llmc").read_bytes()[19] == 1
+    assert (GOLDEN / "v3_ac_topk.llmc").read_bytes()[19] == 0

@@ -1,0 +1,203 @@
+"""Property tests for the batched interleaved rANS coder (codec id 1).
+
+Covers: random + adversarial quantized CDFs (single-quantum symbols,
+total == 2**precision extremes), ragged/empty/1-token streams, masked
+escape interleaving, AC↔rANS equivalence on identical CDF sequences, and
+end-to-end LLMCompressor round trips for codec=rans with/without top-K.
+"""
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from helpers import GoldenPredictor, golden_tokens
+from repro.core import ac, rans
+from repro.core.compressor import CODEC_RANS, VERSION, LLMCompressor
+from repro.core.cdf import pmf_to_cdf, quantize_pmf
+
+
+def _rand_cdf(rng, n, bits):
+    """Random quantized CDF: total == 2**bits, every symbol >= 1 quantum."""
+    pmf = rng.random(n) + 1e-4
+    q = (pmf / pmf.sum() * ((1 << bits) - n)).astype(np.int64) + 1
+    q[int(rng.integers(0, n))] += (1 << bits) - q.sum()
+    cdf = np.zeros(n + 1, np.int64)
+    np.cumsum(q, out=cdf[1:])
+    return cdf
+
+
+def _adversarial_cdf(n, bits, hot):
+    """All mass on one symbol; every other symbol a single quantum."""
+    q = np.ones(n, np.int64)
+    q[hot] = (1 << bits) - (n - 1)
+    cdf = np.zeros(n + 1, np.int64)
+    np.cumsum(q, out=cdf[1:])
+    return cdf
+
+
+# ------------------------------------------------------------ single stream
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 300), st.integers(0, 100), st.integers(0, 10_000),
+       st.integers(8, 16))
+def test_roundtrip_random_cdfs(vocab, n, seed, bits):
+    if (1 << bits) <= vocab:
+        return
+    rng = np.random.default_rng(seed)
+    syms = [int(s) for s in rng.integers(0, vocab, n)]
+    cdfs = [_rand_cdf(rng, vocab, bits) for _ in range(n)]
+    blob = rans.encode_sequence(syms, cdfs, bits)
+    assert rans.decode_sequence(blob, cdfs, bits) == syms
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 500), st.integers(0, 10_000))
+def test_single_quantum_symbols(vocab, seed):
+    """Adversarial: code symbols that hold exactly one quantum of a
+    2**16-total CDF — the worst case for coder state growth."""
+    rng = np.random.default_rng(seed)
+    hot = int(rng.integers(0, vocab))
+    cdf = _adversarial_cdf(vocab, 16, hot)
+    cold = [s for s in (0, vocab - 1, (hot + 1) % vocab)]
+    syms = [hot] + cold * 3 + [hot]
+    cdfs = [cdf] * len(syms)
+    blob = rans.encode_sequence(syms, cdfs, bits=16)
+    assert rans.decode_sequence(blob, cdfs, bits=16) == syms
+
+
+def test_empty_and_one_token_streams():
+    assert rans.encode_sequence([], [], bits=16) == b""
+    cdf = _rand_cdf(np.random.default_rng(0), 10, 16)
+    blob = rans.encode_sequence([7], [cdf], bits=16)
+    assert len(blob) >= 4  # state flush
+    assert rans.decode_sequence(blob, [cdf], bits=16) == [7]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_skewed_efficiency(seed):
+    """Measured rANS bits within 3% + flush overhead of the quantized
+    entropy (same bound the AC suite enforces)."""
+    rng = np.random.default_rng(seed)
+    pmf = np.array([0.97, 0.01, 0.01, 0.01])
+    n = 2000
+    syms = [int(s) for s in rng.choice(4, n, p=pmf)]
+    cdf = pmf_to_cdf(np.asarray(quantize_pmf(pmf, 16)))
+    blob = rans.encode_sequence(syms, [cdf] * n, bits=16)
+    counts = np.bincount(syms, minlength=4)
+    q = np.diff(cdf) / cdf[-1]
+    ideal = -(counts * np.log2(q)).sum()
+    assert len(blob) * 8 <= ideal * 1.03 + 8 * 8
+
+
+# ------------------------------------------------------------ batched coder
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 24), st.integers(0, 10_000))
+def test_batched_ragged_streams_with_escapes(batch, seed):
+    """B streams of different lengths advance through shared masked steps,
+    with a second uniform (escape) step interleaved for some lanes."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(0, 40, batch)
+    enc = rans.BatchedRansEncoder(batch)
+    script = []
+    for t in range(int(lens.max(initial=0))):
+        m = lens > t
+        cdfs = np.stack([_rand_cdf(rng, 12, 16) for _ in range(batch)])
+        syms = rng.integers(0, 12, batch)
+        enc.put_symbols(syms, cdfs, 16, m)
+        em = m & (syms == 11)
+        esc = rng.integers(0, 300, batch)
+        if em.any():
+            enc.put_uniform(esc, rans.uniform_bits(300), em)
+        script.append((m, cdfs, syms, em, esc))
+    streams = enc.finish()
+    assert all(len(streams[b]) == 0 for b in range(batch) if lens[b] == 0)
+    dec = rans.BatchedRansDecoder(streams)
+    for m, cdfs, syms, em, esc in script:
+        got = dec.get(cdfs, 16, m)
+        assert np.array_equal(got[m], syms[m])
+        if em.any():
+            gu = dec.get_uniform(rans.uniform_bits(300), em)
+            assert np.array_equal(gu[em], esc[em])
+
+
+def test_batched_matches_single_stream_bytes():
+    """A batch of B streams must produce byte-identical output to coding
+    each stream alone — interleaving is over *state vectors*, not bytes."""
+    rng = np.random.default_rng(42)
+    B, T = 5, 30
+    cdfs = [[_rand_cdf(rng, 20, 16) for _ in range(T)] for _ in range(B)]
+    syms = [[int(s) for s in rng.integers(0, 20, T)] for _ in range(B)]
+    enc = rans.BatchedRansEncoder(B)
+    for t in range(T):
+        enc.put_symbols(np.array([syms[b][t] for b in range(B)]),
+                        np.stack([cdfs[b][t] for b in range(B)]), 16)
+    batched = enc.finish()
+    for b in range(B):
+        assert batched[b] == rans.encode_sequence(syms[b], cdfs[b], 16)
+
+
+def test_zero_frequency_symbol_rejected():
+    cdf = np.array([0, 5, 5, 1 << 16], np.int64)  # symbol 1 has zero mass
+    enc = rans.BatchedRansEncoder(1)
+    with pytest.raises(ValueError):
+        enc.put_symbols(np.array([1]), cdf[None, :], 16)
+
+
+# --------------------------------------------------------- AC equivalence
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 200), st.integers(1, 120), st.integers(0, 10_000))
+def test_ac_rans_equivalence_on_identical_cdfs(vocab, n, seed):
+    """Both codecs must decode the identical symbol sequence from the
+    identical CDF sequence — the portability contract of the container."""
+    rng = np.random.default_rng(seed)
+    syms = [int(s) for s in rng.integers(0, vocab, n)]
+    cdfs = [_rand_cdf(rng, vocab, 16) for _ in range(n)]
+    ac_blob = ac.encode_sequence(syms, cdfs)
+    rans_blob = rans.encode_sequence(syms, cdfs, 16)
+    assert ac.decode_sequence(ac_blob, cdfs) == syms
+    assert rans.decode_sequence(rans_blob, cdfs, 16) == syms
+    # same entropy model => sizes agree to within per-stream overhead
+    assert abs(len(ac_blob) - len(rans_blob)) <= 8
+
+
+# ----------------------------------------------------- end-to-end compressor
+@pytest.mark.parametrize("topk", [0, 8])
+def test_compressor_roundtrip_rans(topk):
+    pred = GoldenPredictor()
+    toks = golden_tokens(100, seed=5)
+    comp = LLMCompressor(pred, chunk_size=16, topk=topk, decode_batch=4,
+                         codec="rans")
+    blob, stats = comp.compress(toks)
+    assert blob[4] == VERSION
+    assert blob[19] == CODEC_RANS
+    assert np.array_equal(comp.decompress(blob), toks)
+    if topk:
+        assert stats.n_escapes > 0  # random tokens under a fixed table
+
+
+def test_compressor_rans_escape_free_and_escape_heavy():
+    pred = GoldenPredictor()
+    # escape-free: every chunk is the model's own argmax chain from BOS
+    # (chunks restart from a fresh context, so the chain must too)
+    chunk = [int(pred.bos_id)]
+    for _ in range(16):
+        chunk.append(int(np.argmax(pred._table[chunk[-1]])))
+    toks = np.array(chunk[1:] * 4, np.int32)
+    comp = LLMCompressor(pred, chunk_size=16, topk=8, decode_batch=4)
+    blob, stats = comp.compress(toks)
+    assert stats.n_escapes == 0
+    assert np.array_equal(comp.decompress(blob), toks)
+    # escape-heavy: uniform random tokens, tiny top-k
+    toks = golden_tokens(60, seed=8)
+    comp = LLMCompressor(pred, chunk_size=16, topk=2, decode_batch=4)
+    blob, stats = comp.compress(toks)
+    assert stats.n_escapes > 30
+    assert np.array_equal(comp.decompress(blob), toks)
+
+
+def test_compressor_rans_empty_and_single_token():
+    pred = GoldenPredictor()
+    for n in (0, 1):
+        toks = golden_tokens(n, seed=n)
+        comp = LLMCompressor(pred, chunk_size=16, topk=8, decode_batch=4)
+        blob, _ = comp.compress(toks)
+        assert np.array_equal(comp.decompress(blob), toks)
