@@ -302,9 +302,31 @@ def coder_throughput(quick=False):
             "rans_enc_sym_s": rn / r_enc, "rans_dec_sym_s": rn / r_dec}
 
 
+def service_throughput(quick=False):
+    """Continuous-batching service vs naive grouped decode on ragged jobs
+    (chunk counts 1..2B) — the ROADMAP's many-concurrent-users shape.
+    Full sweep + the >= 1.5x CI gate live in benchmarks/service_bench.py."""
+    from benchmarks.service_bench import run_bench, run_mixed
+    t0 = time.time()
+    if quick:
+        res = run_bench(n_jobs=12, slots=4, chunk=16)
+        mixed = run_mixed(slots=4, chunk=16)
+    else:
+        res = run_bench()
+        mixed = run_mixed()
+    res.update(mixed)
+    _csv("service_throughput", (time.time() - t0) * 1e6 / res["n_jobs"],
+         f"jobs_per_s={res['service_jobs_per_s']:.2f};"
+         f"wall_speedup={res['wall_speedup']:.2f};"
+         f"step_speedup={res['step_speedup']:.2f};"
+         f"occupancy={res['occupancy']:.2f}")
+    (RESULTS / "service_throughput.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
 ALL = [table2_information, table3_traditional, table5_main, fig_chunk_size,
        fig_model_size, fig_data_scale, fig9_human_vs_llm, fig8_domain_models,
-       coder_throughput]
+       coder_throughput, service_throughput]
 
 
 def main() -> None:

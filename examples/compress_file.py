@@ -1,44 +1,37 @@
 """End-to-end driver: losslessly compress/decompress any file with a
-trained predictor (the paper's system as a CLI tool).
+trained predictor — now a thin wrapper over the ``llmc`` CLI
+(src/repro/cli.py, also installed as a console script), which routes
+through the continuous-batching service and writes seekable v4
+containers.
 
   PYTHONPATH=src:. python examples/compress_file.py compress  IN OUT.llmc [codec]
   PYTHONPATH=src:. python examples/compress_file.py decompress IN.llmc OUT
+  PYTHONPATH=src:. python examples/compress_file.py info IN.llmc
 
 codec: rans (default) or ac. Decompression reads the codec from the
 container header, so the argument only matters when compressing.
+For chunk ranges / slot counts / predictor choice, use ``llmc`` directly.
 """
 import sys
-import time
 
 sys.path[:0] = ["src", "."]
 
 
 def main():
-    from benchmarks.prep import predictor
-    from repro.core import LLMCompressor
-    from repro.data.tokenizer import decode, encode
-
-    mode, src, dst = sys.argv[1], sys.argv[2], sys.argv[3]
-    codec = sys.argv[4] if len(sys.argv) > 4 else "rans"
-    pred = predictor("pred-base")
-    comp = LLMCompressor(pred, chunk_size=128, topk=48, decode_batch=32,
-                         codec=codec)
-    data = open(src, "rb").read()
-    t0 = time.time()
+    from repro.cli import main as llmc
+    mode = sys.argv[1]
     if mode == "compress":
-        blob, stats = comp.compress(encode(data))
-        open(dst, "wb").write(blob)
-        print(f"{len(data)}B -> {len(blob)}B "
-              f"({len(data)/max(1,len(blob)):.2f}x, {stats.n_escapes} escapes, "
-              f"{time.time()-t0:.1f}s)")
+        argv = ["compress", sys.argv[2], sys.argv[3]]
+        if len(sys.argv) > 4:
+            argv += ["--codec", sys.argv[4]]
     elif mode == "decompress":
-        toks = comp.decompress(data)
-        open(dst, "wb").write(decode(toks))
-        print(f"{len(data)}B -> decoded {toks.size} tokens "
-              f"({time.time()-t0:.1f}s)")
+        argv = ["decompress", sys.argv[2], sys.argv[3]]
+    elif mode == "info":
+        argv = ["info", sys.argv[2]]
     else:
-        raise SystemExit("mode must be compress|decompress")
+        raise SystemExit("mode must be compress|decompress|info")
+    return llmc(argv)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,6 +1,7 @@
-"""Serve a small model with batched requests: score a batch of chunked
-documents (compression scoring path) and run lock-step batched decode —
-the two production serving shapes.
+"""Serve mixed compression traffic from one process: many concurrent
+compress AND decompress jobs of different lengths multiplexed through
+the continuous-batching service — one jitted model program, fixed batch
+shape, slots refilled from the priority queue as chunk-streams finish.
 
   PYTHONPATH=src:. python examples/serve_batch.py
 """
@@ -12,36 +13,41 @@ import numpy as np
 
 
 def main():
-    import jax.numpy as jnp
     from benchmarks.prep import predictor, llm_dataset
     from repro.data.tokenizer import encode
-    from repro.serve.steps import make_score_step, make_serve_step
-    from repro.launch.mesh import local_mesh
-    from repro.models import init_cache
+    from repro.service import CompressionService
 
     pred = predictor("pred-small")
-    cfg = pred.cfg
-    mesh = local_mesh()
+    svc = CompressionService(pred, slots=8, chunk_size=64, topk=16)
 
-    # batched scoring (prefill shape): 8 requests x 128 tokens
-    reqs = np.stack([encode(llm_dataset("wiki", 128, gen_model="pred-small",
-                                        seed=s))[:128] for s in range(8)])
-    score = make_score_step(cfg, mesh, topk=16, s_block=64, global_batch=8)
-    t0 = time.time()
-    ids, qpmf = score(pred.params, {"tokens": jnp.asarray(reqs)})
-    print(f"scored 8x128 tokens -> topk ids {ids.shape}, pmf {qpmf.shape} "
-          f"in {time.time()-t0:.2f}s")
+    # eight documents of very different lengths — the ragged shape a
+    # multi-tenant service actually sees
+    docs = [encode(llm_dataset("wiki", n, gen_model="pred-small", seed=s))
+            for s, n in enumerate((300, 90, 700, 150, 40, 500, 220, 1000))]
 
-    # batched lock-step decode (serve shape)
-    serve = make_serve_step(cfg, mesh, batch=8, topk=16)
-    cache = init_cache(cfg, 8, 64)
-    prev = jnp.zeros((8,), jnp.int32)
     t0 = time.time()
-    for _ in range(32):
-        ids, qpmf, cache = serve(pred.params, cache, prev)
-        prev = ids[:, 0]  # greedy
-    print(f"decoded 32 steps x 8 streams in {time.time()-t0:.2f}s "
-          f"({32*8/(time.time()-t0):.0f} tok/s)")
+    compress_handles = [svc.submit_compress(d) for d in docs]
+    blobs = [h.result()[0] for h in compress_handles]
+    dt_c = time.time() - t0
+    total = sum(d.size for d in docs)
+    print(f"compressed {len(docs)} docs ({total} tokens) -> "
+          f"{sum(len(b) for b in blobs)}B in {dt_c:.1f}s "
+          f"[{svc.stats.model_steps} steps, "
+          f"occupancy {svc.stats.occupancy:.2f}]")
+
+    # decompress all of them concurrently — and interleave one more
+    # compression in the same batch (mixed traffic, no recompilation)
+    t0 = time.time()
+    dec_handles = [svc.submit_decompress(b) for b in blobs]
+    extra = svc.submit_compress(docs[0], priority=-1)   # jumps the queue
+    for d, h in zip(docs, dec_handles):
+        assert np.array_equal(h.result(), d), "LOSSLESS VIOLATION"
+    extra_blob, _ = extra.result()
+    assert extra_blob == blobs[0]
+    print(f"decompressed {len(docs)} docs (+1 priority compress) "
+          f"bit-exact in {time.time() - t0:.1f}s "
+          f"[total occupancy {svc.stats.occupancy:.2f}, "
+          f"{svc.stats.refills} slot refills]")
 
 
 if __name__ == "__main__":

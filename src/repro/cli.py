@@ -1,0 +1,186 @@
+"""``llmc`` — command-line front end for the LLM compression system.
+
+    llmc compress   IN OUT [--codec rans|ac] [--chunk N] [--topk K]
+                           [--slots B] [--predictor NAME] [--v3]
+    llmc decompress IN OUT [--predictor NAME]
+    llmc range      IN OUT --chunks LO:HI [--predictor NAME]
+    llmc info       IN
+
+``compress``/``decompress`` route through the continuous-batching
+service (repro.service) and write/read v4 seekable containers by
+default; ``range`` random-access-decodes a chunk interval from a v4
+archive; ``info`` prints header + index without loading any model.
+
+Predictors come from the benchmark prep cache (trained byte-level LMs,
+benchmarks/prep.py), so the model-dependent commands must run from a
+repo checkout; ``info`` works anywhere. Registered as a console script
+in pyproject.toml (``pip install -e . && llmc info archive.llmc``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _predictor(name: str):
+    sys.path[:0] = ["src", "."]
+    try:
+        from benchmarks.prep import predictor
+    except ImportError as e:
+        raise SystemExit(
+            f"llmc: cannot load predictor {name!r} ({e}); the model-"
+            f"dependent commands need a repo checkout with benchmarks/"
+        )
+    return predictor(name)
+
+
+def _cmd_info(args) -> int:
+    from repro.core import read_header, read_index
+    from repro.core.compressor import VERSION_V4
+    blob = open(args.input, "rb").read()
+    info = read_header(blob)
+    print(f"{args.input}: LLMC v{info.version} codec={info.codec_name} "
+          f"chunk_size={info.chunk_size} n_tokens={info.n_tokens} "
+          f"n_chunks={info.n_chunks} vocab={info.vocab} topk={info.topk} "
+          f"precision={info.precision} ({len(blob)} bytes)")
+    if info.version == VERSION_V4:
+        info = read_index(blob, info)
+        print(f"index: footer verified; encode_batch={info.encode_batch}; "
+              "per-chunk (offset, bytes, tokens, xxh64):")
+        for i, e in enumerate(info.entries):
+            print(f"  chunk {i:4d}: {e.offset:8d} {e.length:6d} "
+                  f"{e.n_tokens:5d} {e.checksum:016x}")
+    else:
+        print("index: none (v2/v3 container — no random access)")
+    return 0
+
+
+def _service(args, pred):
+    from repro.core.cdf import DEFAULT_PRECISION
+    from repro.service import CompressionService
+    return CompressionService(pred, slots=args.slots, chunk_size=args.chunk,
+                              topk=args.topk,
+                              precision=getattr(args, "precision",
+                                                DEFAULT_PRECISION))
+
+
+def _cmd_compress(args) -> int:
+    from repro.core import LLMCompressor
+    from repro.data.tokenizer import encode
+    args.slots = args.slots or 16
+    pred = _predictor(args.predictor)
+    data = open(args.input, "rb").read()
+    toks = encode(data)
+    t0 = time.time()
+    if args.codec == "ac" or args.v3:
+        # legacy codec / wire-minimal container: grouped path
+        comp = LLMCompressor(pred, chunk_size=args.chunk, topk=args.topk,
+                             decode_batch=args.slots, codec=args.codec,
+                             container_version=3 if args.v3 else 4)
+        blob, stats = comp.compress(toks)
+    else:
+        blob, stats = _service(args, pred).submit_compress(toks).result()
+    open(args.output, "wb").write(blob)
+    print(f"{len(data)}B -> {len(blob)}B "
+          f"({len(data) / max(1, len(blob)):.2f}x, "
+          f"{stats.n_tokens} tokens, {time.time() - t0:.1f}s)")
+    return 0
+
+
+def _cmd_decompress(args) -> int:
+    from repro.core import LLMCompressor, read_header
+    from repro.data.tokenizer import decode
+    blob = open(args.input, "rb").read()
+    info = read_header(blob)        # fail fast + learn the geometry
+    if info.version >= 4:
+        from repro.core import read_index
+        info = read_index(blob, info)
+    pred = _predictor(args.predictor)
+    args.chunk, args.topk = info.chunk_size, info.topk
+    args.precision = info.precision
+    args.slots = args.slots or info.encode_batch or 16
+    t0 = time.time()
+    if info.codec_name == "ac":
+        # legacy codec: the service is rANS-only (and its rANS precision
+        # cap would reject legal high-precision AC archives) — grouped
+        # decode directly, same result
+        comp = LLMCompressor(pred, chunk_size=args.chunk, topk=args.topk,
+                             precision=args.precision, codec="ac",
+                             decode_batch=args.slots)
+        toks = comp.decompress(blob)
+    else:
+        toks = _service(args, pred).submit_decompress(blob).result()
+    open(args.output, "wb").write(decode(toks))
+    print(f"{len(blob)}B -> decoded {toks.size} tokens "
+          f"({time.time() - t0:.1f}s)")
+    return 0
+
+
+def _cmd_range(args) -> int:
+    from repro.core import LLMCompressor, read_index
+    from repro.data.tokenizer import decode
+    blob = open(args.input, "rb").read()
+    info = read_index(blob)
+    lo, hi = (int(x) for x in args.chunks.split(":"))
+    if args.slots and info.encode_batch and args.slots != info.encode_batch:
+        print(f"llmc: note: range decode runs at the container's recorded "
+              f"encode batch ({info.encode_batch}); --slots {args.slots} "
+              f"ignored", file=sys.stderr)
+    pred = _predictor(args.predictor)
+    comp = LLMCompressor(pred, chunk_size=info.chunk_size, topk=info.topk,
+                         precision=info.precision,
+                         decode_batch=args.slots or info.encode_batch or 16)
+    t0 = time.time()
+    toks = comp.decompress_range(blob, lo, hi)
+    open(args.output, "wb").write(decode(toks))
+    print(f"chunks [{lo}, {hi}) -> {toks.size} tokens "
+          f"({time.time() - t0:.1f}s)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="llmc", description="LLM next-token-prediction compressor")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p, model=True):
+        p.add_argument("input")
+        if p.prog.split()[-1] != "info":
+            p.add_argument("output")
+        if model:
+            p.add_argument("--predictor", default="pred-base")
+            # default: 16 for compress; for decompress/range, the v4
+            # container's recorded encode batch (bit-exactness needs the
+            # decoder to run the model program at the encoder's batch)
+            p.add_argument("--slots", type=int, default=None)
+
+    p = sub.add_parser("compress", help="file -> .llmc container")
+    common(p)
+    p.add_argument("--codec", choices=("rans", "ac"), default="rans")
+    p.add_argument("--chunk", type=int, default=128)
+    p.add_argument("--topk", type=int, default=48)
+    p.add_argument("--v3", action="store_true",
+                   help="write the wire-minimal v3 container "
+                        "(no index/checksums)")
+    p.set_defaults(fn=_cmd_compress)
+
+    p = sub.add_parser("decompress", help=".llmc container -> file")
+    common(p)
+    p.set_defaults(fn=_cmd_decompress)
+
+    p = sub.add_parser("range", help="random-access decode (v4 only)")
+    common(p)
+    p.add_argument("--chunks", required=True, metavar="LO:HI")
+    p.set_defaults(fn=_cmd_range)
+
+    p = sub.add_parser("info", help="print header + index (no model)")
+    common(p, model=False)
+    p.set_defaults(fn=_cmd_info)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,12 +3,19 @@ probability model for lossless entropy coding (arithmetic or rANS)."""
 from .ac import ArithmeticDecoder, ArithmeticEncoder, uniform_cdf
 from .cdf import (coding_cost_bits, logits_to_cdf, pmf_to_cdf,
                   quantize_pmf, topk_quantized)
-from .compressor import CompressionStats, LLMCompressor, PredictorAdapter
-from .rans import BatchedRansDecoder, BatchedRansEncoder
+from .checksum import xxh64
+from .compressor import (ChunkEntry, CompressionStats, ContainerError,
+                         ContainerInfo, LLMCompressor, PredictorAdapter,
+                         parse_container, read_header, read_index,
+                         write_container)
+from .rans import BatchedRansDecoder, BatchedRansEncoder, SlotRansEncoder
 
 __all__ = [
     "ArithmeticDecoder", "ArithmeticEncoder", "uniform_cdf",
-    "BatchedRansDecoder", "BatchedRansEncoder",
+    "BatchedRansDecoder", "BatchedRansEncoder", "SlotRansEncoder",
     "coding_cost_bits", "logits_to_cdf", "pmf_to_cdf", "quantize_pmf",
-    "topk_quantized", "CompressionStats", "LLMCompressor", "PredictorAdapter",
+    "topk_quantized", "xxh64",
+    "ChunkEntry", "CompressionStats", "ContainerError", "ContainerInfo",
+    "LLMCompressor", "PredictorAdapter",
+    "parse_container", "read_header", "read_index", "write_container",
 ]

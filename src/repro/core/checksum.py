@@ -1,0 +1,79 @@
+"""XXH64 content checksums for the v4 container (DESIGN.md §8).
+
+The v4 footer carries one 64-bit checksum per chunk stream plus one over
+header+index, so corruption is *detected* before the entropy decoder runs
+on garbage (a flipped bit in an rANS stream otherwise decodes "cleanly"
+into wrong tokens — the coder has no redundancy of its own).
+
+This is the reference XXH64 algorithm (Collet) in pure Python integers:
+no C extension dependency, bit-compatible with the `xxhash` package
+(``xxhash.xxh64_intdigest``), fast enough for the per-chunk stream sizes
+the container holds (streams are a few KB; the 32-byte stripe loop costs
+~a dozen int ops per stripe).
+"""
+from __future__ import annotations
+
+_P1 = 0x9E3779B185EBCA87
+_P2 = 0xC2B2AE3D27D4EB4F
+_P3 = 0x165667B19E3779F9
+_P4 = 0x85EBCA77C2B2AE63
+_P5 = 0x27D4EB2F165667C5
+_MASK = (1 << 64) - 1
+
+
+def _rotl(x: int, r: int) -> int:
+    return ((x << r) | (x >> (64 - r))) & _MASK
+
+
+def _round(acc: int, lane: int) -> int:
+    acc = (acc + lane * _P2) & _MASK
+    return (_rotl(acc, 31) * _P1) & _MASK
+
+
+def _merge(h: int, acc: int) -> int:
+    h ^= _round(0, acc)
+    return (h * _P1 + _P4) & _MASK
+
+
+def xxh64(data: bytes, seed: int = 0) -> int:
+    """64-bit XXH64 digest of ``data`` as an unsigned int."""
+    n = len(data)
+    end = n - n % 32
+    if n >= 32:
+        v1 = (seed + _P1 + _P2) & _MASK
+        v2 = (seed + _P2) & _MASK
+        v3 = seed & _MASK
+        v4 = (seed - _P1) & _MASK
+        for i in range(0, end, 32):
+            v1 = _round(v1, int.from_bytes(data[i:i + 8], "little"))
+            v2 = _round(v2, int.from_bytes(data[i + 8:i + 16], "little"))
+            v3 = _round(v3, int.from_bytes(data[i + 16:i + 24], "little"))
+            v4 = _round(v4, int.from_bytes(data[i + 24:i + 32], "little"))
+        h = (_rotl(v1, 1) + _rotl(v2, 7) + _rotl(v3, 12)
+             + _rotl(v4, 18)) & _MASK
+        h = _merge(h, v1)
+        h = _merge(h, v2)
+        h = _merge(h, v3)
+        h = _merge(h, v4)
+    else:
+        h = (seed + _P5) & _MASK
+    h = (h + n) & _MASK
+    i = end
+    while i + 8 <= n:
+        h ^= _round(0, int.from_bytes(data[i:i + 8], "little"))
+        h = (_rotl(h, 27) * _P1 + _P4) & _MASK
+        i += 8
+    if i + 4 <= n:
+        h ^= (int.from_bytes(data[i:i + 4], "little") * _P1) & _MASK
+        h = (_rotl(h, 23) * _P2 + _P3) & _MASK
+        i += 4
+    while i < n:
+        h ^= (data[i] * _P5) & _MASK
+        h = (_rotl(h, 11) * _P1) & _MASK
+        i += 1
+    h ^= h >> 33
+    h = (h * _P2) & _MASK
+    h ^= h >> 29
+    h = (h * _P3) & _MASK
+    h ^= h >> 32
+    return h

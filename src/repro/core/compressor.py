@@ -37,18 +37,42 @@ Two host coders share the container:
   coder (core/ac.py): per-stream Python loops, kept as the legacy /
   cross-check backend and for decoding v2 archives.
 
-Container format (little-endian), version 3:
+Container format (little-endian)
+--------------------------------
+Shared header (v3 and v4; v2 lacks the codec byte):
   magic 'LLMC' | u8 version | u8 flags | u16 chunk_size | u32 n_tokens
   u32 vocab | u16 topk (0 => full vocab) | u8 precision | u8 codec
-  then per chunk: varint byte-length + codec stream.
-Version 2 (seed format) lacks the codec byte and is always AC; the
-decoder still accepts it — the codec actually used for decode comes from
-the container, not from this object's configuration.
+Body (all versions): per chunk, varint byte-length + codec stream.
+
+Version 4 appends a **seekable footer** after the body (DESIGN.md §8):
+one index entry per chunk —
+  u64 stream offset (from container start) | u32 stream length
+  u32 valid token count | u64 xxh64(stream)
+— followed by u32 encode batch (the lane count the encoder's model
+program ran at; 0 = unrecorded), u64 xxh64(header || entries || encode
+batch), u32 n_chunks, u32 footer length, and the end magic 'LC4F'. The
+encode batch is recorded because on real models the logits are only
+bit-reproducible at the *same* batch shape (XLA reduction order varies
+with B), so it is the decode batch/slot count required for bit-exact
+decode — advisory for batch-invariant predictors, load-bearing for
+production models. The index enables random-access decode
+of chunk ranges (``decompress_range``) and out-of-order chunk completion
+from the service scheduler; the checksums turn silent corruption into
+``ContainerError`` before the entropy coder runs on garbage.
+
+The codec, version and geometry used for decode come from the container,
+never from this object's configuration. Version compatibility: v2
+read-only (AC implied), v3 read/write, v4 read/write. A bare
+``LLMCompressor`` writes v3 — the wire-minimal format every ratio
+benchmark measures (the v4 index costs a fixed 24 B/chunk, which
+amortizes over production payloads but distorts micro-scale ratios);
+the service layer (repro.service) and the ``llmc`` CLI write v4, where
+seekability and integrity checking earn their bytes.
 """
 from __future__ import annotations
 
 import struct
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Protocol
 
 import numpy as np
@@ -56,16 +80,31 @@ import numpy as np
 from . import ac, rans
 from .cdf import (DEFAULT_PRECISION, build_topk_cdfs, logits_to_cdf,
                   pmf_to_cdf, topk_quantized_jit)
+from .checksum import xxh64
 
 MAGIC = b"LLMC"
-VERSION = 3
-_V2_HEADER = "<BBHIIHB"          # seed header (no codec byte)
-_V3_HEADER = "<BBHIIHBB"
+VERSION_V3 = 3
+VERSION_V4 = 4
+VERSION = VERSION_V4                 # newest supported container version
+_V2_HEADER = "<BBHIIHB"              # seed header (no codec byte)
+_V3_HEADER = "<BBHIIHBB"             # v3 and v4 share this header layout
+_V4_ENTRY = "<QIIQ"                  # offset, stream len, valid tokens, xxh64
+_V4_ENTRY_SIZE = struct.calcsize(_V4_ENTRY)
+_V4_END_MAGIC = b"LC4F"
+_V4_TRAILER = 12                     # u32 n_chunks | u32 footer_len | magic
 
 CODEC_AC = 0
 CODEC_RANS = 1
 CODEC_IDS = {"ac": CODEC_AC, "rans": CODEC_RANS}
 CODEC_NAMES = {v: k for k, v in CODEC_IDS.items()}
+
+
+class ContainerError(ValueError):
+    """Malformed, truncated, corrupt, or configuration-mismatched container.
+
+    Everything the parser can detect raises this (a ValueError subclass),
+    never a bare IndexError/struct.error from running off the end of a
+    truncated blob."""
 
 
 class PredictorAdapter(Protocol):
@@ -100,16 +139,254 @@ def _write_varint(out: bytearray, v: int) -> None:
             return
 
 
-def _read_varint(buf: bytes, pos: int) -> tuple[int, int]:
+def _read_varint(buf: bytes, pos: int, end: int | None = None) -> tuple[int, int]:
+    """Bounds-checked varint read from ``buf[pos:end]``."""
+    end = len(buf) if end is None else end
     shift = 0
     val = 0
     while True:
+        if pos >= end:
+            raise ContainerError(
+                f"truncated container: varint runs past byte {end}")
         b = buf[pos]
         pos += 1
         val |= (b & 0x7F) << shift
         if not b & 0x80:
             return val, pos
         shift += 7
+        if shift > 63:
+            raise ContainerError("corrupt container: varint longer than 64 bits")
+
+
+# ---------------------------------------------------------------- container
+@dataclass
+class ChunkEntry:
+    """One v4 index-footer entry (also synthesized for v2/v3 at parse)."""
+    offset: int          # byte offset of the stream from container start
+    length: int          # stream byte length
+    n_tokens: int        # valid tokens in this chunk (<= chunk_size)
+    checksum: int = 0    # xxh64 of the stream bytes (0 for v2/v3)
+
+
+@dataclass
+class ContainerInfo:
+    """Parsed header (+ index when v4) of an .llmc container."""
+    version: int
+    flags: int
+    chunk_size: int
+    n_tokens: int
+    vocab: int
+    topk: int
+    precision: int
+    codec: int
+    header_size: int
+    n_chunks: int
+    entries: list[ChunkEntry] = field(default_factory=list)
+    # v4 only: the model-program lane count the encoder ran at (0 when
+    # unrecorded / v2 / v3). Bit-exact decode of non-batch-invariant
+    # models requires decoding at this same batch shape.
+    encode_batch: int = 0
+
+    @property
+    def codec_name(self) -> str:
+        return CODEC_NAMES[self.codec]
+
+
+def chunk_valid_lengths(n_tokens: int, chunk_size: int) -> np.ndarray:
+    """Valid token count per chunk for a contiguous n_tokens stream."""
+    n_chunks = max(1, -(-n_tokens // chunk_size))
+    ends = np.minimum(np.arange(1, n_chunks + 1) * chunk_size, n_tokens)
+    starts = np.arange(n_chunks) * chunk_size
+    return np.maximum(ends - starts, 0).astype(np.int64)
+
+
+def read_header(blob: bytes) -> ContainerInfo:
+    """Parse and validate the container header (any supported version)."""
+    if len(blob) < 4 or blob[:4] != MAGIC:
+        raise ContainerError("bad magic (not an LLMC container)")
+    if len(blob) < 5:
+        raise ContainerError("truncated container: missing version byte")
+    version = blob[4]
+    if version == 2:
+        hdr = _V2_HEADER
+    elif version in (VERSION_V3, VERSION_V4):
+        hdr = _V3_HEADER
+    else:
+        raise ContainerError(f"unsupported container version {version}")
+    hsize = 4 + struct.calcsize(hdr)
+    if len(blob) < hsize:
+        raise ContainerError(
+            f"truncated container: {len(blob)} bytes < {hsize}-byte header")
+    fields = struct.unpack(hdr, blob[4:hsize])
+    if version == 2:
+        _, flags, C, n, vocab, topk, precision = fields
+        codec = CODEC_AC              # v2 archives predate the codec byte
+    else:
+        _, flags, C, n, vocab, topk, precision, codec = fields
+        if codec not in CODEC_NAMES:
+            raise ContainerError(f"unknown codec id {codec}")
+    if C == 0:
+        raise ContainerError("corrupt header: chunk_size is zero")
+    # the *container's* codec decides which limits apply: a 24-bit-precision
+    # AC container is legal, the same precision under rANS is not decodable
+    if codec == CODEC_RANS and precision > rans.MAX_PRECISION:
+        raise ContainerError(
+            f"container precision {precision} exceeds rANS coder limit "
+            f"{rans.MAX_PRECISION}")
+    if precision < 1 or (1 << precision) <= (topk + 1 if topk else vocab):
+        raise ContainerError(
+            f"corrupt header: precision {precision} too small for "
+            f"{'top-' + str(topk) if topk else 'vocab ' + str(vocab)} alphabet")
+    n_chunks = max(1, -(-n // C))
+    return ContainerInfo(version, flags, C, n, vocab, topk, precision,
+                         codec, hsize, n_chunks)
+
+
+def read_index(blob: bytes, info: ContainerInfo | None = None) -> ContainerInfo:
+    """Parse + verify the v4 index footer; returns info with ``entries``
+    populated. Verifies the footer checksum (which covers the header too)
+    but not the per-chunk stream checksums — those are checked by
+    ``parse_container``/``decompress_range`` for the chunks actually read."""
+    info = info or read_header(blob)
+    if info.version != VERSION_V4:
+        raise ContainerError(
+            f"container version {info.version} has no index footer "
+            f"(random access requires v4)")
+    if len(blob) < info.header_size + _V4_TRAILER:
+        raise ContainerError("truncated container: missing v4 footer")
+    if blob[-4:] != _V4_END_MAGIC:
+        raise ContainerError("truncated or corrupt container: "
+                             "v4 end magic missing")
+    n_chunks_f, footer_len = struct.unpack("<II", blob[-12:-4])
+    expect_len = n_chunks_f * _V4_ENTRY_SIZE + 12
+    if footer_len != expect_len:
+        raise ContainerError(
+            f"corrupt footer: length field {footer_len} != {expect_len} "
+            f"for {n_chunks_f} chunks")
+    if n_chunks_f != info.n_chunks:
+        raise ContainerError(
+            f"corrupt container: footer indexes {n_chunks_f} chunks, header "
+            f"implies {info.n_chunks}")
+    footer_start = len(blob) - _V4_TRAILER - footer_len
+    if footer_start < info.header_size:
+        raise ContainerError("truncated container: footer overlaps header")
+    entries_end = footer_start + n_chunks_f * _V4_ENTRY_SIZE
+    (encode_batch,) = struct.unpack("<I", blob[entries_end:entries_end + 4])
+    (footer_hash,) = struct.unpack("<Q",
+                                   blob[entries_end + 4:entries_end + 12])
+    if xxh64(blob[:info.header_size] + blob[footer_start:entries_end + 4]) \
+            != footer_hash:
+        raise ContainerError("corrupt container: footer checksum mismatch "
+                             "(header or index damaged)")
+    entries = []
+    for i in range(n_chunks_f):
+        off, ln, nt, cks = struct.unpack_from(_V4_ENTRY, blob,
+                                              footer_start + i * _V4_ENTRY_SIZE)
+        if nt > info.chunk_size:
+            raise ContainerError(
+                f"corrupt index: chunk {i} claims {nt} tokens "
+                f"(chunk_size {info.chunk_size})")
+        if off < info.header_size or off + ln > footer_start:
+            raise ContainerError(
+                f"corrupt index: chunk {i} stream [{off}, {off + ln}) "
+                f"outside body [{info.header_size}, {footer_start})")
+        entries.append(ChunkEntry(off, ln, nt, cks))
+    if sum(e.n_tokens for e in entries) != info.n_tokens:
+        raise ContainerError(
+            "corrupt container: index token counts disagree with header "
+            f"n_tokens {info.n_tokens}")
+    info.entries = entries
+    info.encode_batch = encode_batch
+    return info
+
+
+def parse_container(blob: bytes) -> tuple[ContainerInfo, list[bytes]]:
+    """Full parse: header (+ index when v4) + per-chunk streams, with all
+    integrity checks. Returns (info-with-entries, streams)."""
+    info = read_header(blob)
+    if info.version == VERSION_V4:
+        info = read_index(blob, info)
+        body_end = len(blob) - _V4_TRAILER - \
+            (info.n_chunks * _V4_ENTRY_SIZE + 12)
+    else:
+        body_end = len(blob)
+    pos = info.header_size
+    streams: list[bytes] = []
+    valid = chunk_valid_lengths(info.n_tokens, info.chunk_size)
+    for i in range(info.n_chunks):
+        ln, pos = _read_varint(blob, pos, body_end)
+        if pos + ln > body_end:
+            raise ContainerError(
+                f"truncated container: chunk {i} claims {ln} bytes, "
+                f"{body_end - pos} remain")
+        stream = blob[pos:pos + ln]
+        if info.version == VERSION_V4:
+            e = info.entries[i]
+            if e.offset != pos or e.length != ln:
+                raise ContainerError(
+                    f"corrupt container: chunk {i} framing ({pos}, {ln}) "
+                    f"disagrees with index ({e.offset}, {e.length})")
+            if xxh64(stream) != e.checksum:
+                raise ContainerError(
+                    f"corrupt container: chunk {i} checksum mismatch")
+        else:
+            info.entries.append(ChunkEntry(pos, ln, int(valid[i])))
+        streams.append(stream)
+        pos += ln
+    return info, streams
+
+
+def write_container(streams: list[bytes], *, version: int, chunk_size: int,
+                    n_tokens: int, vocab: int, topk: int, precision: int,
+                    codec_id: int,
+                    valid_lengths: np.ndarray | None = None,
+                    encode_batch: int = 0) -> bytes:
+    """Assemble a v3 or v4 container from per-chunk codec streams (in
+    chunk order — the service scheduler completes chunks out of order and
+    reorders before calling this). ``encode_batch`` (v4) records the
+    model-program lane count every chunk was encoded at (ragged groups
+    are dead-lane padded, never shrunk) — the batch shape a decoder must
+    use for bit-exact logits on non-batch-invariant models."""
+    if version not in (VERSION_V3, VERSION_V4):
+        raise ValueError(f"cannot write container version {version}")
+    flags = 1 if topk else 0
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack(_V3_HEADER, version, flags, chunk_size, n_tokens,
+                       vocab, topk, precision, codec_id)
+    header = bytes(out)
+    if valid_lengths is None:
+        valid_lengths = chunk_valid_lengths(n_tokens, chunk_size)
+    v4 = version == VERSION_V4
+    entries = bytearray()
+    for s, nv in zip(streams, valid_lengths):
+        _write_varint(out, len(s))
+        if v4:      # v3 skips the index — and the per-stream hashing
+            entries += struct.pack(_V4_ENTRY, len(out), len(s), int(nv),
+                                   xxh64(s))
+        out += s
+    if v4:
+        tail = bytes(entries) + struct.pack("<I", encode_batch)
+        footer_hash = xxh64(header + tail)
+        out += tail
+        out += struct.pack("<Q", footer_hash)
+        out += struct.pack("<II", len(streams), len(tail) + 8)
+        out += _V4_END_MAGIC
+    return bytes(out)
+
+
+def check_container_config(info: ContainerInfo, *, vocab: int,
+                           chunk_size: int, topk: int,
+                           precision: int) -> None:
+    """Raise ContainerError unless the container's coding geometry matches
+    the decoder's configuration — shared by the grouped compressor and the
+    service so the two validation paths cannot drift."""
+    if info.vocab != vocab or info.chunk_size != chunk_size \
+            or info.topk != topk or info.precision != precision:
+        raise ContainerError(
+            "compressor configuration mismatch with container "
+            f"(container: vocab={info.vocab} chunk={info.chunk_size} "
+            f"topk={info.topk} precision={info.precision})")
 
 
 @dataclass
@@ -133,18 +410,23 @@ class LLMCompressor:
                  topk: int = 0,
                  precision: int = DEFAULT_PRECISION,
                  decode_batch: int = 64,
-                 codec: str = "rans"):
+                 codec: str = "rans",
+                 container_version: int = VERSION_V3):
         if topk and topk >= predictor.vocab_size:
             topk = 0
         if codec not in CODEC_IDS:
             raise ValueError(f"unknown codec {codec!r} "
                              f"(choose from {sorted(CODEC_IDS)})")
+        if container_version not in (VERSION_V3, VERSION_V4):
+            raise ValueError(f"cannot write container version "
+                             f"{container_version} (v2 is read-only)")
         self.predictor = predictor
         self.chunk_size = int(chunk_size)
         self.topk = int(topk)
         self.precision = int(precision)
         self.decode_batch = int(decode_batch)
         self.codec = codec
+        self.container_version = int(container_version)
         if (1 << precision) <= (topk + 1 if topk else predictor.vocab_size):
             raise ValueError("precision too small for alphabet")
         # only the rANS backend caps precision (AC handles up to 30 bits);
@@ -179,29 +461,32 @@ class LLMCompressor:
 
         stats = CompressionStats(n_tokens=n)
         streams: list[bytes] = []
-        B = self.decode_batch
+        # The model program runs at ONE lane count for the whole archive:
+        # batch shape is coding geometry (XLA reduction order varies with
+        # B), so a ragged tail group is padded with dead lanes rather than
+        # shrinking the program — and the count recorded in the v4 footer
+        # is therefore exactly what every chunk was encoded at.
+        B = min(self.decode_batch, n_chunks)
         for i in range(0, n_chunks, B):
             batch = chunks[i:i + B]
+            nb = batch.shape[0]
+            if nb < B:
+                batch = np.concatenate(
+                    [batch, np.zeros((B - nb, C), np.int32)])
             if exact:
                 logits = self._score_incremental(batch)
             else:
                 logits = np.asarray(self.predictor.score_chunks(batch))
-            streams.extend(self._encode_batch(batch, logits,
+            streams.extend(self._encode_batch(batch[:nb], logits[:nb],
                                               i, n, stats))
-        out = bytearray()
-        flags = 1 if self.topk else 0
-        out += MAGIC
-        out += struct.pack(_V3_HEADER, VERSION, flags, C, n,
-                           self.predictor.vocab_size, self.topk,
-                           self.precision, CODEC_IDS[self.codec])
-        stats.header_bytes = len(out) + 0
-        body = bytearray()
-        for s in streams:
-            _write_varint(body, len(s))
-            body += s
-        stats.header_bytes += len(body) - sum(len(s) for s in streams)
+        blob = write_container(
+            streams, version=self.container_version, chunk_size=C,
+            n_tokens=n, vocab=self.predictor.vocab_size, topk=self.topk,
+            precision=self.precision, codec_id=CODEC_IDS[self.codec],
+            encode_batch=B)
         stats.payload_bytes = sum(len(s) for s in streams)
-        return bytes(out + body), stats
+        stats.header_bytes = len(blob) - stats.payload_bytes
+        return blob, stats
 
     def _score_incremental(self, batch: np.ndarray) -> np.ndarray:
         """Teacher-forced scoring through the decode program: one call to
@@ -221,9 +506,8 @@ class LLMCompressor:
 
     # -------------------------------------------------------------- encode
     def _valid_lengths(self, B, chunk_offset, n_total) -> np.ndarray:
-        C = self.chunk_size
-        return np.array([min(C, max(0, n_total - (chunk_offset + b) * C))
-                         for b in range(B)], dtype=np.int64)
+        lens = chunk_valid_lengths(n_total, self.chunk_size)
+        return lens[chunk_offset:chunk_offset + B]
 
     def _encode_batch(self, batch, logits, chunk_offset, n_total, stats):
         self._accumulate_ideal_bits(batch, logits, chunk_offset, n_total,
@@ -314,45 +598,89 @@ class LLMCompressor:
         return streams
 
     # ----------------------------------------------------------- decompress
-    def decompress(self, blob: bytes) -> np.ndarray:
-        if blob[:4] != MAGIC:
-            raise ValueError("bad magic")
-        version = blob[4]
-        if version == 2:
-            hdr = _V2_HEADER
-            _, flags, C, n, vocab, topk, precision = struct.unpack(
-                hdr, blob[4:4 + struct.calcsize(hdr)])
-            codec = CODEC_AC          # v2 archives predate the codec byte
-        elif version == VERSION:
-            hdr = _V3_HEADER
-            (_, flags, C, n, vocab, topk, precision,
-             codec) = struct.unpack(hdr, blob[4:4 + struct.calcsize(hdr)])
-            if codec not in CODEC_NAMES:
-                raise ValueError(f"unknown codec id {codec}")
-        else:
-            raise ValueError(f"unsupported version {version}")
-        if vocab != self.predictor.vocab_size or C != self.chunk_size \
-                or topk != self.topk or precision != self.precision:
-            raise ValueError("compressor configuration mismatch with container")
-        pos = 4 + struct.calcsize(hdr)
-        n_chunks = max(1, -(-n // C))
-        streams = []
-        for _ in range(n_chunks):
-            ln, pos = _read_varint(blob, pos)
-            streams.append(blob[pos:pos + ln])
-            pos += ln
-        out = np.zeros(n_chunks * C, dtype=np.int32)
-        B = self.decode_batch
-        for i in range(0, n_chunks, B):
-            group = streams[i:i + B]
-            dec_tokens = self._decode_group(group, C, n, i, codec)
-            out[i * C:(i + len(group)) * C] = dec_tokens.ravel()
-        return out[:n]
+    def _check_config(self, info: ContainerInfo) -> None:
+        check_container_config(info, vocab=self.predictor.vocab_size,
+                               chunk_size=self.chunk_size, topk=self.topk,
+                               precision=self.precision)
 
-    def _decode_group(self, streams, C, n_total, chunk_offset, codec: int):
+    def decompress(self, blob: bytes) -> np.ndarray:
+        info, streams = parse_container(blob)
+        self._check_config(info)
+        valid = np.array([e.n_tokens for e in info.entries], np.int64)
+        C = self.chunk_size
+        out = np.zeros(info.n_chunks * C, dtype=np.int32)
+        # decode at the encoder's recorded lane count (v4); v2/v3 record
+        # nothing, so decode_batch must match the encoder's — mirror its
+        # min() and dead-lane padding either way
+        B = info.encode_batch or min(self.decode_batch, info.n_chunks)
+        for i in range(0, info.n_chunks, B):
+            group = streams[i:i + B]
+            ng = len(group)
+            v = valid[i:i + B]
+            if ng < B:
+                group = group + [b""] * (B - ng)
+                v = np.concatenate([v, np.zeros(B - ng, np.int64)])
+            dec_tokens = self._decode_group(group, v, info.codec)
+            out[i * C:(i + ng) * C] = dec_tokens[:ng].ravel()
+        return out[:info.n_tokens]
+
+    def decompress_range(self, blob: bytes, chunk_start: int,
+                         chunk_stop: int | None = None) -> np.ndarray:
+        """Random-access decode of chunks [chunk_start, chunk_stop) from a
+        v4 container — the index footer locates the streams, so only the
+        requested chunks' bytes are read, verified, and decoded. The
+        result is bit-identical to the corresponding slice of a full
+        ``decompress`` (chunks are independent by construction, §5.4).
+
+        Bit-exactness on real models needs more than chunk independence:
+        logits are only reproducible at the encoder's model-program batch
+        shape (XLA reduction order varies with B). So the requested chunks
+        are regrouped into their *encode-time* groups — stride taken from
+        the container's recorded encode batch — and each group runs at its
+        encode-time lane count, with unrequested lanes left empty (masked
+        out of the coder; lanes are independent, so their content never
+        reaches the requested lanes' logits)."""
+        info = read_index(blob)
+        self._check_config(info)
+        if chunk_stop is None:
+            chunk_stop = chunk_start + 1
+        if not 0 <= chunk_start < chunk_stop <= info.n_chunks:
+            raise IndexError(
+                f"chunk range [{chunk_start}, {chunk_stop}) outside "
+                f"[0, {info.n_chunks})")
+        B = info.encode_batch or min(self.decode_batch, info.n_chunks)
+        C = self.chunk_size
+        out = np.zeros((chunk_stop - chunk_start) * C, dtype=np.int32)
+        total = 0
+        for g in range(chunk_start // B, (chunk_stop - 1) // B + 1):
+            g_lo = g * B
+            g_hi = min(g_lo + B, info.n_chunks)
+            sel_lo = max(chunk_start, g_lo)
+            sel_hi = min(chunk_stop, g_hi)
+            group = [b""] * B               # encode-time lane count, always
+            v = np.zeros(B, np.int64)
+            for j in range(sel_lo, sel_hi):
+                e = info.entries[j]
+                s = blob[e.offset:e.offset + e.length]
+                if xxh64(s) != e.checksum:
+                    raise ContainerError(
+                        f"corrupt container: chunk {j} checksum mismatch")
+                group[j - g_lo] = s
+                v[j - g_lo] = e.n_tokens
+            toks = self._decode_group(group, v, info.codec)
+            for j in range(sel_lo, sel_hi):
+                b = j - g_lo
+                out[total:total + int(v[b])] = toks[b, :int(v[b])]
+                total += int(v[b])
+        return out[:total]
+
+    # Decode groups take explicit per-stream valid lengths (slot-resumable
+    # form): the same inner loops serve full decompress, range decode, and
+    # the continuous-batching scheduler's drain path.
+    def _decode_group(self, streams, valid: np.ndarray, codec: int):
         if codec == CODEC_RANS:
-            return self._decode_group_rans(streams, C, n_total, chunk_offset)
-        return self._decode_group_ac(streams, C, n_total, chunk_offset)
+            return self._decode_group_rans(streams, valid)
+        return self._decode_group_ac(streams, valid)
 
     def _begin_group(self, B, C):
         if hasattr(self.predictor, "set_decode_len"):
@@ -361,11 +689,11 @@ class LLMCompressor:
         prev = np.full((B,), self.predictor.bos_id, dtype=np.int32)
         return state, prev
 
-    def _decode_group_rans(self, streams, C, n_total, chunk_offset):
+    def _decode_group_rans(self, streams, valid):
         """Lock-step batched decode: one model step + one vectorized coder
         step (plus a masked escape step) per token position."""
-        B = len(streams)
-        valid = self._valid_lengths(B, chunk_offset, n_total)
+        B, C = len(streams), self.chunk_size
+        valid = np.asarray(valid, np.int64)
         dec = rans.BatchedRansDecoder(streams)
         tokens = np.zeros((B, C), dtype=np.int32)
         state, prev = self._begin_group(B, C)
@@ -394,12 +722,12 @@ class LLMCompressor:
             prev = nxt
         return tokens
 
-    def _decode_group_ac(self, streams, C, n_total, chunk_offset):
+    def _decode_group_ac(self, streams, valid):
         """Legacy per-stream arithmetic decode (reference codec + v2)."""
         V = self.predictor.vocab_size
-        B = len(streams)
+        B, C = len(streams), self.chunk_size
+        valid = np.asarray(valid, np.int64)
         decoders = [ac.ArithmeticDecoder(s) for s in streams]
-        valid = self._valid_lengths(B, chunk_offset, n_total)
         tokens = np.zeros((B, C), dtype=np.int32)
         state, prev = self._begin_group(B, C)
         for t in range(int(valid.max(initial=0))):

@@ -156,6 +156,76 @@ class BatchedRansEncoder:
         return out
 
 
+def _encode_steps(steps: list[tuple[int, int, int]]) -> bytes:
+    """Scalar backward coder over one stream's recorded (start, freq, bits)
+    steps — byte-identical to ``BatchedRansEncoder.finish()`` for the same
+    step sequence (property-tested in tests/test_rans.py)."""
+    if not steps:
+        return b""
+    x = RANS_L
+    tail = bytearray()
+    for start, freq, bits in reversed(steps):
+        x_max = ((RANS_L >> bits) << 8) * freq
+        while x >= x_max:
+            tail.append(x & 0xFF)
+            x >>= 8
+        x = ((x // freq) << bits) + (x % freq) + start
+    tail.reverse()
+    return x.to_bytes(_STATE_BYTES, "little") + bytes(tail)
+
+
+class SlotRansEncoder:
+    """Per-slot LIFO recorder for the continuous-batching scheduler.
+
+    ``BatchedRansEncoder`` flushes every stream at once in ``finish()`` —
+    right for lock-step groups, wrong for a slot machine where chunk
+    streams complete out of order. This variant records steps per slot
+    and materializes one slot's bytes the moment its chunk finishes
+    (``flush_slot``), freeing the slot for refill while its neighbours
+    keep coding. Output framing is byte-identical to the batched encoder.
+    """
+
+    def __init__(self, n_slots: int):
+        self.n_slots = int(n_slots)
+        self._steps: list[list[tuple[int, int, int]]] = \
+            [[] for _ in range(self.n_slots)]
+
+    def put(self, starts, freqs, bits: int, mask=None) -> None:
+        """Record one step for every active slot (see BatchedRansEncoder)."""
+        if not 0 < bits <= MAX_PRECISION:
+            raise ValueError(f"bits {bits} out of range (1..{MAX_PRECISION})")
+        starts = np.broadcast_to(np.asarray(starts, np.int64),
+                                 (self.n_slots,))
+        freqs = np.broadcast_to(np.asarray(freqs, np.int64), (self.n_slots,))
+        active = (np.ones(self.n_slots, bool) if mask is None
+                  else np.asarray(mask, bool))
+        if (freqs[active] <= 0).any():
+            raise ValueError("zero-frequency symbol")
+        for b in np.nonzero(active)[0]:
+            self._steps[b].append((int(starts[b]), int(freqs[b]), bits))
+
+    def put_symbols(self, symbols, cdfs: np.ndarray, bits: int,
+                    mask=None) -> None:
+        symbols = np.asarray(symbols, np.int64)
+        cdfs = np.asarray(cdfs, np.int64)
+        starts = np.take_along_axis(cdfs, symbols[:, None], axis=1)[:, 0]
+        ends = np.take_along_axis(cdfs, symbols[:, None] + 1, axis=1)[:, 0]
+        self.put(starts, ends - starts, bits, mask)
+
+    def put_uniform(self, symbols, bits: int, mask=None) -> None:
+        self.put(symbols, np.ones(self.n_slots, np.int64), bits, mask)
+
+    def pending(self, slot: int) -> int:
+        """Number of recorded, unflushed steps in ``slot``."""
+        return len(self._steps[slot])
+
+    def flush_slot(self, slot: int) -> bytes:
+        """Materialize and clear one slot's stream (LIFO backward pass)."""
+        out = _encode_steps(self._steps[slot])
+        self._steps[slot] = []
+        return out
+
+
 class BatchedRansDecoder:
     """Streaming forward decoder over B independent framed streams.
 
@@ -163,6 +233,10 @@ class BatchedRansDecoder:
     in the exact order (and with the exact masks) the encoder ``put`` —
     the adaptive caller (LLMCompressor) reproduces that order because
     each decoded token feeds the model that produces the next CDF.
+
+    Slots are individually re-attachable (``attach``/``detach``) so the
+    continuous-batching scheduler can point a finished slot at the next
+    chunk stream without rebuilding the decoder.
     """
 
     def __init__(self, streams: list[bytes]):
@@ -177,6 +251,41 @@ class BatchedRansDecoder:
         for i in range(_STATE_BYTES):
             self._x |= self._buf[:, i].astype(_U64) << _U64(8 * i)
         self._cur = np.full(B, _STATE_BYTES, np.int64)
+
+    # ------------------------------------------------- per-slot attachment
+    def attach(self, slot: int, data: bytes) -> None:
+        """Point ``slot`` at a fresh framed stream (state reloaded from its
+        header). The other slots' positions and states are untouched."""
+        n = len(data)
+        if 0 < n < _STATE_BYTES:
+            raise ValueError(f"stream shorter than state header ({n} bytes)")
+        if n > self._buf.shape[1]:
+            grown = np.zeros((self._buf.shape[0], n), _U8)
+            grown[:, :self._buf.shape[1]] = self._buf
+            self._buf = grown
+        self._buf[slot, :n] = np.frombuffer(data, _U8)
+        self._lens[slot] = n
+        self._cur[slot] = _STATE_BYTES
+        x = 0
+        for i in range(_STATE_BYTES - 1, -1, -1):
+            x = (x << 8) | int(self._buf[slot, i])
+        self._x[slot] = _U64(x) if n else _U64(0)
+
+    def detach(self, slot: int) -> None:
+        """Mark ``slot`` empty (no stream attached)."""
+        self._lens[slot] = 0
+        self._cur[slot] = _STATE_BYTES
+        self._x[slot] = _U64(0)
+
+    def exhausted(self, slot: int) -> bool:
+        """True iff the slot's stream decoded cleanly to its end: every
+        byte consumed and the coder state back at its initial value —
+        the rANS analogue of a well-formed EOF (decode inverts encode
+        exactly, so the state must return to RANS_L)."""
+        if self._lens[slot] == 0:
+            return True
+        return (int(self._cur[slot]) == int(self._lens[slot])
+                and int(self._x[slot]) == RANS_L)
 
     def _renorm(self, mask: np.ndarray) -> None:
         active = mask & (self._x < _U64(RANS_L)) & (self._cur < self._lens)

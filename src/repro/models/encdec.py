@@ -94,7 +94,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
         # cross-attn K/V precomputed from encoder states at prefill
         "xk": jnp.zeros((L, batch, Se, Kp, hd), dtype),
         "xv": jnp.zeros((L, batch, Se, Kp, hd), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),   # per-lane (slot-resettable)
     }
 
 

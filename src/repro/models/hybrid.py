@@ -70,7 +70,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     c = init_ssm_cache(cfg, batch, cfg.n_layers, dtype)
     c["k"] = jnp.zeros((n_apply, batch, max_len, Kp, hd), dtype)
     c["v"] = jnp.zeros((n_apply, batch, max_len, Kp, hd), dtype)
-    c["pos"] = jnp.zeros((), jnp.int32)
+    c["pos"] = jnp.zeros((batch,), jnp.int32)   # per-lane (slot-resettable)
     return c
 
 

@@ -260,8 +260,13 @@ def attention_block_causal(q, k, v, *, causal=True, window=None,
 def decode_attention(q, k_cache, v_cache, pos, *, window=None):
     """Single-step attention over a preallocated KV cache.
 
-    q (B,1,H,hd); caches (B,S,K,hd); pos () int32 = index of the new token
-    (cache holds `pos` valid entries at [0..pos-1] plus the new one at pos).
+    q (B,1,H,hd); caches (B,S,K,hd); pos () or (B,) int32 = index of the
+    new token per lane (each lane's cache holds valid entries at
+    [0..pos_b-1] plus the new one at pos_b). Per-lane positions are what
+    make continuous batching possible: a refilled slot restarts at
+    pos_b = 0 while its neighbours keep decoding — masked lanes
+    contribute exp(NEG_INF - m) == 0.0 exactly, so each lane's output is
+    bit-identical to a fresh-cache decode at the same position.
     """
     B, _, H, hd = q.shape
     _, S, K, _ = k_cache.shape
@@ -271,10 +276,12 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None):
     s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale
     idx = jnp.arange(S)
-    valid = idx <= pos
+    pos = jnp.asarray(pos)
+    posv = pos[None] if pos.ndim == 0 else pos          # (1,) or (B,)
+    valid = idx[None, :] <= posv[:, None]               # (1|B, S)
     if window:
-        valid &= idx > pos - window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid &= idx[None, :] > posv[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
     return o.reshape(B, 1, H, hd).astype(q.dtype)

@@ -170,7 +170,7 @@ def forward(params, cfg: ModelConfig, batch: dict, *, return_hidden=False, **_):
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     c = init_ssm_cache(cfg, batch, cfg.n_layers, dtype)
-    c["pos"] = jnp.zeros((), jnp.int32)
+    c["pos"] = jnp.zeros((batch,), jnp.int32)   # per-lane (slot-resettable)
     return c
 
 

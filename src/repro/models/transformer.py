@@ -139,7 +139,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     """KV cache. kv_cache_dtype="int8" stores quantized K/V with per-
     (position, head) fp16 scales — halves decode HBM traffic vs bf16
     (§Perf iteration; decompression is decode/memory-bound). Losslessness
-    is unaffected: compressor and decompressor run the same program."""
+    is unaffected: compressor and decompressor run the same program.
+
+    ``pos`` is PER-LANE (B,): every batch lane carries its own decode
+    position, so the continuous-batching scheduler (repro.service) can
+    reset one slot to a fresh context while the rest keep stepping —
+    lock-step callers simply see all lanes advance together."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     L, Kp, hd = cfg.n_layers, cfg.padded_kv_heads, cfg.head_dim
@@ -149,12 +154,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
             "v": jnp.zeros((L, batch, S, Kp, hd), jnp.int8),
             "k_scale": jnp.zeros((L, batch, S, Kp), jnp.float16),
             "v_scale": jnp.zeros((L, batch, S, Kp), jnp.float16),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     return {
         "k": jnp.zeros((L, batch, S, Kp, hd), dtype),
         "v": jnp.zeros((L, batch, S, Kp, hd), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -176,18 +181,32 @@ def _cache_slot(cfg: ModelConfig, pos, cache_len):
     return pos % cache_len if cfg.sliding_window else pos
 
 
+def decode_requires_lockstep(cfg, mesh=None) -> bool:
+    """True when decode for ``cfg`` takes the seq-sharded TP attention
+    path (KV heads don't divide TP, no sliding window, explicit-TP or
+    serve layout): that path collapses per-lane cache positions to a
+    single max, so it is lock-step only — no per-slot refill. ``mesh``
+    defaults to the ambient mesh context; callers outside the context
+    (the service scheduler's up-front refusal) pass the predictor's mesh
+    explicitly. One predicate shared with ``_use_seq_sharded_decode`` so
+    the refusal and the dispatch cannot drift."""
+    from .layers import _MESH_VAR, _LAYOUT_VAR, EXPLICIT_TP
+    mesh = _MESH_VAR.get() if mesh is None else mesh
+    explicit = EXPLICIT_TP or _LAYOUT_VAR.get() == "serve"
+    if not explicit or mesh is None \
+            or "model" not in getattr(mesh, "axis_names", ()):
+        return False
+    tp = mesh.shape["model"]
+    return (tp > 1 and getattr(cfg, "padded_kv_heads", 0) % tp != 0
+            and not getattr(cfg, "sliding_window", 0))
+
+
 def _use_seq_sharded_decode(cfg):
     """Flash-decode combine applies when the cache seq dim is TP-sharded
     (KV heads don't divide TP) — see cache_pspecs."""
-    from .layers import _MESH_VAR, _LAYOUT_VAR, EXPLICIT_TP
+    from .layers import _MESH_VAR
     mesh = _MESH_VAR.get()
-    explicit = EXPLICIT_TP or _LAYOUT_VAR.get() == "serve"
-    if not explicit or mesh is None or "model" not in mesh.axis_names:
-        return None
-    tp = mesh.shape["model"]
-    if tp == 1 or cfg.padded_kv_heads % tp == 0 or cfg.sliding_window:
-        return None
-    return mesh
+    return mesh if decode_requires_lockstep(cfg, mesh) else None
 
 
 def _seq_sharded_decode_attn(cfg, mesh, q, k_new, v_new, kc, vc, pos,
@@ -196,8 +215,13 @@ def _seq_sharded_decode_attn(cfg, mesh, q, k_new, v_new, kc, vc, pos,
     TP, e.g. kv=8 on model=16). shard_map: each model shard updates its
     local slice, computes a partial online softmax, and partials combine
     with a log-sum-exp psum — O(B·H·hd) wire bytes instead of XLA's
-    cache-sized gather (§Perf iteration C2). Returns (o, kc, vc, scales)."""
+    cache-sized gather (§Perf iteration C2). Returns (o, kc, vc, scales).
+
+    This TP path keeps the lock-step assumption: all lanes share one
+    position (the service scheduler's per-slot reset is a single-host /
+    replicated-cache feature; see DESIGN.md §8)."""
     from jax.experimental.shard_map import shard_map
+    pos = jnp.max(jnp.asarray(pos))     # uniform across lanes by contract
     B, _, Hp, hd = q.shape
     S = kc.shape[1]
     tp = mesh.shape["model"]
@@ -276,7 +300,12 @@ def _seq_sharded_decode_attn(cfg, mesh, q, k_new, v_new, kc, vc, pos,
 
 def _decode_attn_one(cfg, lp, x, kc, vc, pos, prefix="", scales=None):
     """One-token attention vs. a (B,S,K,hd) cache; returns out, new kc/vc
-    (+ new scales when the cache is int8-quantized)."""
+    (+ new scales when the cache is int8-quantized).
+
+    ``pos`` is (B,): each lane reads/writes its own cache position
+    (scatter update + per-lane causal mask), which is what lets the
+    service scheduler hold lanes at different chunk offsets. With all
+    lanes equal this computes exactly what the old scalar-pos path did."""
     B, _, D = x.shape
     hd, Hp, Kp = cfg.head_dim, cfg.padded_heads, cfg.padded_kv_heads
     q = jnp.einsum("bsd,dh->bsh", x, lp[f"w{prefix}q"]).reshape(B, 1, Hp, hd)
@@ -285,8 +314,8 @@ def _decode_attn_one(cfg, lp, x, kc, vc, pos, prefix="", scales=None):
     if cfg.qk_norm and not prefix:
         q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
         k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
-    q = rope(q, pos[None], cfg.rope_theta)
-    k = rope(k, pos[None], cfg.rope_theta)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
     S = kc.shape[1]
     mesh_ss = _use_seq_sharded_decode(cfg) if not prefix else None
     if mesh_ss is not None:
@@ -297,27 +326,29 @@ def _decode_attn_one(cfg, lp, x, kc, vc, pos, prefix="", scales=None):
         if scales is not None:
             return out, kc, vc, new_scales
         return out, kc, vc
-    slot = _cache_slot(cfg, pos, S)
+    slot = _cache_slot(cfg, pos, S)                     # (B,)
+    lanes = jnp.arange(B)
     new_scales = None
     if scales is not None:      # int8 cache path
         ks, vs = scales
         kq, k_sc = _quant_kv(k)
         vq, v_sc = _quant_kv(v)
-        kc = jax.lax.dynamic_update_slice(kc, kq, (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, vq, (0, slot, 0, 0))
-        ks = jax.lax.dynamic_update_slice(ks, k_sc, (0, slot, 0))
-        vs = jax.lax.dynamic_update_slice(vs, v_sc, (0, slot, 0))
+        kc = kc.at[lanes, slot].set(kq[:, 0])
+        vc = vc.at[lanes, slot].set(vq[:, 0])
+        ks = ks.at[lanes, slot].set(k_sc[:, 0])
+        vs = vs.at[lanes, slot].set(v_sc[:, 0])
         new_scales = (ks, vs)
         k_eff = _dequant_kv(kc, ks).astype(x.dtype)
         v_eff = _dequant_kv(vc, vs).astype(x.dtype)
     else:
-        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        kc = kc.at[lanes, slot].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[lanes, slot].set(v[:, 0].astype(vc.dtype))
         k_eff, v_eff = kc, vc
     if cfg.sliding_window:
-        # ring buffer: slot s holds abs position pos - ((pos - s) mod S); valid if >= 0
+        # ring buffer: slot s holds abs position pos - ((pos - s) mod S);
+        # valid if >= 0 — computed per lane
         s_idx = jnp.arange(S)
-        abs_pos = pos - jnp.mod(pos - s_idx, S)
+        abs_pos = pos[:, None] - jnp.mod(pos[:, None] - s_idx[None, :], S)
         o = _ring_attention(q, k_eff, v_eff, abs_pos >= 0)
     else:
         o = decode_attention(q, k_eff, v_eff, pos)
@@ -329,13 +360,14 @@ def _decode_attn_one(cfg, lp, x, kc, vc, pos, prefix="", scales=None):
 
 
 def _ring_attention(q, kc, vc, valid):
+    """valid (B, S) per-lane mask over the ring-buffer cache."""
     B, _, H, hd = q.shape
     _, S, K, _ = kc.shape
     G = H // K
     qg = q.reshape(B, K, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
                    kc.astype(jnp.float32)) / jnp.sqrt(float(hd))
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskh->bkgh", p, vc.astype(jnp.float32))
     return o.reshape(B, 1, H, hd).astype(q.dtype)

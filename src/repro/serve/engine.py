@@ -57,8 +57,31 @@ class ModelPredictor:
                                                   **fam_kw)
             return logits[..., :cfg.vocab_size], cache
 
+        @jax.jit
+        def _reset(cache, mask):
+            """Zero the cache lanes selected by mask (B,) bool — per-slot
+            fresh context for the continuous-batching scheduler. 'pos'
+            lanes return to 0; recurrent state (SSM conv/state) MUST be
+            zeroed (it is the context); attention K/V lanes are zeroed
+            for hygiene (the per-lane causal mask already hides them);
+            encdec cross-attn caches (xk/xv) are per-job conditioning and
+            survive the reset."""
+            def leaf(path, x):
+                name = path[-1].key if hasattr(path[-1], "key") else ""
+                if name in ("xk", "xv"):
+                    return x
+                if name == "pos":
+                    return jnp.where(mask, 0, x).astype(x.dtype)
+                # every other cache leaf is (L, B, ...) — batch on axis 1
+                shape = [1] * x.ndim
+                shape[1] = mask.shape[0]
+                return jnp.where(mask.reshape(shape), jnp.zeros((), x.dtype),
+                                 x)
+            return jax.tree_util.tree_map_with_path(leaf, cache)
+
         self._score = _score
         self._decode = _decode
+        self._reset = _reset
 
     # --------------------------------------------------- PredictorAdapter
     def score_chunks(self, tokens: np.ndarray) -> np.ndarray:
@@ -87,6 +110,14 @@ class ModelPredictor:
                                      jnp.asarray(prev_tokens, jnp.int32),
                                      self.extra_batch)
         return np.asarray(logits), state
+
+    def reset_slots(self, state, mask: np.ndarray):
+        """Reset the cache lanes selected by ``mask`` (B,) bool to a fresh
+        context (pos 0, zero recurrent state) without touching the other
+        lanes — the slot-refill primitive of the continuous-batching
+        scheduler (repro.service). One jitted call, no recompilation:
+        the mask is a runtime input."""
+        return self._reset(state, jnp.asarray(mask, bool))
 
     # ----------------------------------------------------------- sampling
     def generate(self, n_tokens: int, batch: int = 1, *, temperature=1.0,

@@ -1,0 +1,155 @@
+"""Public API of the compression service: submit → await.
+
+``CompressionService`` owns one predictor (one jitted model program at a
+fixed slot count) and multiplexes any number of concurrent compress and
+decompress jobs through the continuous-batching scheduler. Results come
+back through ``JobHandle.result()``, which cooperatively drives the
+scheduler until that job completes — submit many handles first, then
+await them in any order, and all jobs share every model step.
+
+Containers: writes v4 (seekable index footer + xxh64 checksums; the
+out-of-order chunk completion of the scheduler needs the index anyway).
+Reads v2/v3/v4; legacy AC-codec containers (and all v2 archives) cannot
+ride the interleaved-rANS slot machine, so they are decoded eagerly at
+submit time through the grouped path — same result, no await needed.
+AC archives above the rANS precision cap can't construct a matching
+service at all (the cap guards the service's own rANS coding) — decode
+those through ``LLMCompressor`` directly, as the ``llmc`` CLI does.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import rans
+from repro.core.cdf import DEFAULT_PRECISION
+from repro.core.compressor import (CODEC_AC, CODEC_RANS, VERSION_V4,
+                                   CompressionStats, ContainerError,
+                                   LLMCompressor, check_container_config,
+                                   parse_container, write_container)
+from .scheduler import SlotScheduler
+from .session import COMPRESS, DECOMPRESS, ChunkTask, Job, JobHandle
+
+
+class ServiceError(RuntimeError):
+    """Internal service failure (scheduler stall, double completion)."""
+
+
+class CompressionService:
+    """Continuous-batching compression/decompression server over one
+    predictor. See repro.service.__init__ for usage."""
+
+    def __init__(self, predictor, *, slots: int = 8, chunk_size: int = 256,
+                 topk: int = 0, precision: int = DEFAULT_PRECISION,
+                 container_version: int = VERSION_V4):
+        if topk and topk >= predictor.vocab_size:
+            topk = 0
+        if (1 << precision) <= (topk + 1 if topk else predictor.vocab_size):
+            raise ValueError("precision too small for alphabet")
+        if precision > rans.MAX_PRECISION:
+            raise ValueError(f"precision {precision} exceeds rANS coder "
+                             f"limit {rans.MAX_PRECISION}")
+        self.predictor = predictor
+        self.slots = int(slots)
+        self.chunk_size = int(chunk_size)
+        self.topk = int(topk)
+        self.precision = int(precision)
+        self.container_version = int(container_version)
+        self.scheduler = SlotScheduler(predictor, n_slots=self.slots,
+                                       chunk_size=self.chunk_size,
+                                       topk=self.topk,
+                                       precision=self.precision)
+        self._next_job = 0
+        self._legacy: LLMCompressor | None = None
+
+    # ------------------------------------------------------------- submit
+    def submit_compress(self, tokens, *, priority: int = 0) -> JobHandle:
+        """Queue a token stream for compression into a v4 container."""
+        tokens = np.asarray(tokens, np.int32).ravel()
+        n = int(tokens.size)
+        C = self.chunk_size
+        n_chunks = max(1, -(-n // C))
+
+        def assemble(streams: list[bytes]):
+            blob = write_container(
+                streams, version=self.container_version, chunk_size=C,
+                n_tokens=n, vocab=self.predictor.vocab_size,
+                topk=self.topk, precision=self.precision,
+                codec_id=CODEC_RANS, encode_batch=self.slots)
+            payload = sum(len(s) for s in streams)
+            return blob, CompressionStats(
+                n_tokens=n, payload_bytes=payload,
+                header_bytes=len(blob) - payload)
+
+        job = Job(self._new_job_id(), COMPRESS, priority, n_chunks, n,
+                  assemble)
+        for i in range(n_chunks):
+            lo, hi = i * C, min((i + 1) * C, n)
+            self.scheduler.submit(
+                ChunkTask(job, i, COMPRESS, max(0, hi - lo),
+                          tokens=tokens[lo:hi]),
+                priority)
+        return JobHandle(job, self)
+
+    def submit_decompress(self, blob: bytes, *, priority: int = 0) -> JobHandle:
+        """Queue a container for decompression. The container is parsed
+        and integrity-checked up front (raises ContainerError on corrupt
+        or configuration-mismatched blobs — bad input fails at submit,
+        not mid-flight in a shared batch)."""
+        info, streams = parse_container(blob)
+        check_container_config(info, vocab=self.predictor.vocab_size,
+                               chunk_size=self.chunk_size, topk=self.topk,
+                               precision=self.precision)
+        if info.codec == CODEC_RANS:
+            # reject before anything is queued, so a corrupt container
+            # cannot leave a partial job's chunks orphaned in the queue
+            for i, (s, e) in enumerate(zip(streams, info.entries)):
+                if e.n_tokens > 0 and len(s) < rans._STATE_BYTES:
+                    raise ContainerError(
+                        f"chunk {i}: stream of {len(s)} bytes cannot code "
+                        f"{e.n_tokens} tokens (corrupt container)")
+        job = Job(self._new_job_id(), DECOMPRESS, priority, info.n_chunks,
+                  info.n_tokens,
+                  lambda chunks: np.concatenate(chunks)[:info.n_tokens]
+                  if chunks else np.zeros(0, np.int32))
+        if info.codec == CODEC_AC:
+            # legacy codec: grouped lock-step decode, resolved eagerly
+            job.resolve(self._legacy_compressor().decompress(blob))
+            return JobHandle(job, self)
+        for i, (stream, entry) in enumerate(zip(streams, info.entries)):
+            self.scheduler.submit(
+                ChunkTask(job, i, DECOMPRESS, entry.n_tokens,
+                          stream=stream),
+                priority)
+        return JobHandle(job, self)
+
+    # -------------------------------------------------------------- drive
+    def poll(self) -> bool:
+        """Advance the scheduler by one fixed-shape step; False if idle."""
+        return self.scheduler.step()
+
+    def run(self) -> None:
+        """Drain every queued job to completion."""
+        self.scheduler.run()
+
+    def _run_until(self, job: Job) -> None:
+        while not job.done:
+            if not self.scheduler.step():
+                raise ServiceError(
+                    f"scheduler idle but job {job.job_id} incomplete "
+                    f"({len(job._results)}/{job.n_chunks} chunks)")
+
+    @property
+    def stats(self):
+        return self.scheduler.stats
+
+    # ------------------------------------------------------------ helpers
+    def _new_job_id(self) -> int:
+        self._next_job += 1
+        return self._next_job
+
+    def _legacy_compressor(self) -> LLMCompressor:
+        if self._legacy is None:
+            self._legacy = LLMCompressor(
+                self.predictor, chunk_size=self.chunk_size, topk=self.topk,
+                precision=self.precision, decode_batch=self.slots)
+        return self._legacy

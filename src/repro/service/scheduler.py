@@ -1,0 +1,265 @@
+"""Slot-based continuous-batching scheduler (DESIGN.md §8).
+
+One fixed-shape jitted decode program serves mixed compress/decompress
+traffic: the B slots each hold one chunk-stream; every ``step()`` runs
+exactly one model ``decode_step`` over all B lanes plus one vectorized
+rANS coder step over the active lanes. The grouped decoder
+(``LLMCompressor._decode_group``) runs every step to ``valid.max()`` of
+its group, so one long chunk holds the other slots idle; here a finished
+slot is refilled from the priority queue on the next step, and the model
+program never recompiles (B is constant, the masks are runtime inputs).
+
+Both directions share each step's CDF tables, computed once per step
+from the same logits:
+
+* decompress slots pull their next token from the rANS decoder
+  (per-slot streams attached/detached on refill);
+* compress slots run teacher-forced "exact" scoring (DESIGN.md §6):
+  the ground-truth token is fed back, its (start, freq) interval
+  recorded in the per-slot LIFO encoder, and the slot's stream is
+  flushed the moment the chunk completes (out-of-order completion —
+  the v4 index footer puts the chunks back in order).
+
+Bit-exactness across batch compositions: each lane's logits are a
+function of that lane's cache and input only (attention/SSM/MoE-dropless
+are lane-independent by construction — the same property the lock-step
+decoder already relies on), and per-slot cache positions make a refilled
+lane's computation identical to a fresh-cache decode. So a container
+compressed by the service decodes through ``LLMCompressor`` and vice
+versa, regardless of what traffic shared the batch.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import rans
+from repro.core.cdf import (DEFAULT_PRECISION, logits_to_cdf, pmf_to_cdf,
+                            topk_quantized_jit)
+from repro.core.compressor import ContainerError
+from .session import COMPRESS, ChunkTask
+
+
+@dataclass
+class SchedulerStats:
+    model_steps: int = 0          # fixed-shape decode_step invocations
+    lane_steps: int = 0           # model_steps × B (capacity offered)
+    token_steps: int = 0          # active-lane tokens actually coded
+    chunks_completed: int = 0
+    refills: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of offered lane-steps that coded a real token."""
+        return self.token_steps / max(1, self.lane_steps)
+
+
+class SlotScheduler:
+    """Continuous-batching executor over ``n_slots`` model lanes.
+
+    The scheduler is codec-fixed to rANS (codec id 1): the interleaved
+    coder is what makes one vectorized coder step per position possible.
+    Legacy AC containers take the grouped path in the service API.
+    """
+
+    def __init__(self, predictor, *, n_slots: int, chunk_size: int,
+                 topk: int = 0, precision: int = DEFAULT_PRECISION):
+        if not 0 < precision <= rans.MAX_PRECISION:
+            raise ValueError(f"precision {precision} outside rANS range "
+                             f"(1..{rans.MAX_PRECISION})")
+        # The seq-sharded TP decode path collapses per-lane cache positions
+        # with jnp.max — lock-step only; running it under slot refill would
+        # corrupt streams silently. Refuse up front (same predicate the
+        # model's decode dispatch uses, so the two cannot drift); such
+        # predictors must use the grouped decoder.
+        cfg = getattr(predictor, "cfg", None)
+        if cfg is not None:
+            from repro.models.transformer import decode_requires_lockstep
+            if decode_requires_lockstep(cfg, getattr(predictor, "mesh",
+                                                     None)):
+                raise ValueError(
+                    "continuous batching needs per-lane cache positions; "
+                    "the seq-sharded TP decode path (padded_kv_heads not "
+                    "divisible by TP) is lock-step only — use a replicated-"
+                    "cache predictor or LLMCompressor's grouped decoder")
+        self.predictor = predictor
+        self.B = int(n_slots)
+        self.C = int(chunk_size)
+        self.topk = int(topk)
+        self.precision = int(precision)
+        self._esc_bits = rans.uniform_bits(predictor.vocab_size)
+
+        B, C = self.B, self.C
+        self._queue: list = []          # heap of (priority, seq, task)
+        self._seq = 0
+        self._tasks: list[ChunkTask | None] = [None] * B
+        self._active = np.zeros(B, bool)
+        self._is_dec = np.zeros(B, bool)
+        self._t = np.zeros(B, np.int64)         # next position per slot
+        self._valid = np.zeros(B, np.int64)
+        self._prev = np.zeros(B, np.int32)
+        self._tok_buf = np.zeros((B, C), np.int32)   # per-slot chunk tokens
+        self._dec = rans.BatchedRansDecoder([b""] * B)
+        self._enc = rans.SlotRansEncoder(B)
+        self._state = None              # model decode state, created lazily
+        self._used = np.zeros(B, bool)  # lanes that have held a chunk
+        self.stats = SchedulerStats()
+
+    # ------------------------------------------------------------- intake
+    def submit(self, task: ChunkTask, priority: int = 0) -> None:
+        if task.valid == 0:         # empty chunk: no coded bytes, no slot
+            task.complete(b"" if task.kind == COMPRESS
+                          else np.zeros(0, np.int32))
+            return
+        if task.kind != COMPRESS and len(task.stream) < rans._STATE_BYTES:
+            # any chunk that coded >= 1 token carries at least the coder
+            # state flush; shorter means a corrupt length varint — fail at
+            # submit, not mid-step in a shared batch (where the attach
+            # would raise a bare ValueError and strand the slot)
+            raise ContainerError(
+                f"chunk {task.chunk_index}: stream of {len(task.stream)} "
+                f"bytes cannot code {task.valid} tokens (corrupt container)")
+        heapq.heappush(self._queue, (priority, self._seq, task))
+        self._seq += 1
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and not self._active.any()
+
+    # -------------------------------------------------------------- slots
+    def _ensure_state(self):
+        if self._state is None:
+            if hasattr(self.predictor, "set_decode_len"):
+                self.predictor.set_decode_len(self.C)
+            self._state = self.predictor.begin_decode(self.B)
+
+    def _refill(self) -> None:
+        """Assign queued chunk tasks to free slots; reset their cache
+        lanes to a fresh context in ONE jitted call (mask input)."""
+        free = np.nonzero(~self._active)[0]
+        if not free.size or not self._queue:
+            return
+        mask = np.zeros(self.B, bool)
+        bos = getattr(self.predictor, "bos_id")
+        for b in free:
+            if not self._queue:
+                break
+            _, _, task = heapq.heappop(self._queue)
+            self._tasks[b] = task
+            self._active[b] = True
+            self._is_dec[b] = task.kind != COMPRESS
+            self._t[b] = 0
+            self._valid[b] = task.valid
+            self._prev[b] = bos
+            if task.kind == COMPRESS:
+                self._tok_buf[b, :] = 0
+                self._tok_buf[b, :task.valid] = task.tokens
+                self._dec.detach(b)
+            else:
+                self._dec.attach(b, task.stream)
+            mask[b] = True
+            self.stats.refills += 1
+        if mask.any() and self._state is not None:
+            if hasattr(self.predictor, "reset_slots"):
+                self._state = self.predictor.reset_slots(self._state, mask)
+            elif (mask & self._used).any():
+                # a stateful predictor without per-slot reset would hand a
+                # refilled lane the previous chunk's context — corrupt
+                # streams with no error. Refuse rather than degrade.
+                raise ValueError(
+                    "stateful predictor lacks reset_slots(state, mask); "
+                    "slot refill needs a per-lane cache reset (see "
+                    "serve/engine.ModelPredictor) — or use the grouped "
+                    "decoder")
+        self._used |= mask
+
+    # --------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One fixed-shape model step + one coder step over all active
+        slots. Returns False when there was nothing to do."""
+        self._ensure_state()
+        self._refill()
+        m = self._active
+        if not m.any():
+            return False
+        logits, self._state = self.predictor.decode_step(self._state,
+                                                         self._prev)
+        logits = np.asarray(logits)
+        dm = m & self._is_dec
+        cm = m & ~self._is_dec
+        truth = self._tok_buf[np.arange(self.B), self._t % self.C]
+        if self.topk:
+            ids, qpmf = topk_quantized_jit(logits, self.topk, self.precision)
+            ids = np.asarray(ids)
+            cdfs = pmf_to_cdf(np.asarray(qpmf))              # (B, K+2)
+            syms = np.zeros(self.B, np.int64)
+            if dm.any():
+                slots = self._dec.get(cdfs, self.precision, dm)
+                esc = dm & (slots == self.topk)
+                syms = np.take_along_axis(
+                    ids, np.minimum(slots, self.topk - 1)[:, None],
+                    axis=-1)[:, 0].astype(np.int64)
+                if esc.any():
+                    u = self._dec.get_uniform(self._esc_bits, esc)
+                    syms = np.where(esc, u, syms)
+            if cm.any():
+                match = ids == truth[:, None]
+                has = match.any(axis=-1)
+                slot_e = np.where(has, match.argmax(axis=-1), self.topk)
+                starts = np.take_along_axis(cdfs, slot_e[:, None],
+                                            axis=1)[:, 0]
+                ends = np.take_along_axis(cdfs, slot_e[:, None] + 1,
+                                          axis=1)[:, 0]
+                self._enc.put(starts, ends - starts, self.precision, cm)
+                em = cm & ~has
+                if em.any():
+                    self._enc.put_uniform(truth, self._esc_bits, em)
+        else:
+            cdfs = logits_to_cdf(logits, self.precision)      # (B, V+1)
+            syms = np.zeros(self.B, np.int64)
+            if dm.any():
+                syms = self._dec.get(cdfs, self.precision, dm)
+            if cm.any():
+                self._enc.put_symbols(truth.astype(np.int64), cdfs,
+                                      self.precision, cm)
+        # write decoded tokens; advance every active lane
+        nxt = np.where(dm, syms, truth).astype(np.int32)
+        self._tok_buf[dm, self._t[dm]] = nxt[dm]
+        self._prev = np.where(m, nxt, self._prev).astype(np.int32)
+        self._t[m] += 1
+        self.stats.model_steps += 1
+        self.stats.lane_steps += self.B
+        self.stats.token_steps += int(m.sum())
+        for b in np.nonzero(m & (self._t >= self._valid))[0]:
+            self._finish_slot(int(b))
+        return True
+
+    def _finish_slot(self, b: int) -> None:
+        task = self._tasks[b]
+        try:
+            if task.kind == COMPRESS:
+                task.complete(self._enc.flush_slot(b))
+            else:
+                if not self._dec.exhausted(b):
+                    raise ContainerError(
+                        f"chunk {task.chunk_index}: rANS stream not "
+                        f"exhausted after {task.valid} tokens (corrupt "
+                        f"stream, wrong model, or a slot count different "
+                        f"from the encoder's batch — see the container's "
+                        f"recorded encode batch)")
+                self._dec.detach(b)
+                task.complete(self._tok_buf[b, :task.valid].copy())
+        except Exception as e:
+            task.fail(e)
+        self._tasks[b] = None
+        self._active[b] = False
+        self._is_dec[b] = False
+        self.stats.chunks_completed += 1
+
+    def run(self) -> SchedulerStats:
+        """Drain queue + slots to completion."""
+        while self.step():
+            pass
+        return self.stats

@@ -1,0 +1,112 @@
+"""Job and session bookkeeping for the compression service.
+
+A *job* is one client request (compress a token stream / decompress a
+container). The session layer splits jobs into independent per-chunk
+work items (``ChunkTask``), hands them to the scheduler, and reassembles
+completed chunks — which arrive **out of order** — into the job's final
+result. Chunk independence is the format's own guarantee (paper §5.4,
+DESIGN.md §2): nothing here needs cross-chunk state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+COMPRESS = "compress"
+DECOMPRESS = "decompress"
+
+
+@dataclass
+class ChunkTask:
+    """One chunk's worth of work — the scheduler's unit of slot refill.
+
+    Exactly one of ``tokens`` (compress: the chunk's token ids, unpadded)
+    or ``stream`` (decompress: the chunk's coded bytes) is set. ``valid``
+    is the chunk's true token count (< chunk_size only for a job's final
+    chunk)."""
+    job: "Job"
+    chunk_index: int
+    kind: str
+    valid: int
+    tokens: Optional[np.ndarray] = None
+    stream: Optional[bytes] = None
+
+    def complete(self, result) -> None:
+        self.job._chunk_done(self.chunk_index, result)
+
+    def fail(self, err: Exception) -> None:
+        self.job._fail(err)
+
+
+@dataclass
+class Job:
+    """One submitted request, decomposed into ``n_chunks`` ChunkTasks."""
+    job_id: int
+    kind: str
+    priority: int
+    n_chunks: int
+    n_tokens: int
+    # called with the in-order list of per-chunk results once all chunks
+    # are done; returns the job's final result (container bytes / tokens)
+    assemble: Callable[[list], Any]
+    _results: dict = field(default_factory=dict)
+    _result: Any = None
+    _error: Optional[Exception] = None
+    _done: bool = False
+
+    def _chunk_done(self, chunk_index: int, result) -> None:
+        if self._done:
+            return
+        if chunk_index in self._results:
+            raise RuntimeError(
+                f"job {self.job_id}: chunk {chunk_index} completed twice")
+        self._results[chunk_index] = result
+        if len(self._results) == self.n_chunks:
+            try:
+                ordered = [self._results[i] for i in range(self.n_chunks)]
+                self._result = self.assemble(ordered)
+            except Exception as e:          # surface through the handle
+                self._error = e
+            self._done = True
+
+    def _fail(self, err: Exception) -> None:
+        self._error = err
+        self._done = True
+
+    def resolve(self, result) -> None:
+        """Complete the whole job immediately (no scheduler involvement —
+        e.g. legacy-codec containers decoded through the grouped path)."""
+        self._result = result
+        self._done = True
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+
+class JobHandle:
+    """Client-side future for a submitted job. ``result()`` drives the
+    service's scheduler until this job completes (cooperative, single
+    process — the service owns the model program)."""
+
+    def __init__(self, job: Job, service):
+        self._job = job
+        self._service = service
+
+    @property
+    def job_id(self) -> int:
+        return self._job.job_id
+
+    def done(self) -> bool:
+        return self._job.done
+
+    def result(self):
+        """Block (drive the scheduler) until the job finishes; returns the
+        decompressed tokens or (container bytes, stats), or re-raises the
+        job's failure."""
+        self._service._run_until(self._job)
+        if self._job._error is not None:
+            raise self._job._error
+        return self._job._result

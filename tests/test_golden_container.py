@@ -7,9 +7,12 @@
   be regenerated, which is the point — new code must keep decoding old
   archives bit-exactly.
 * ``v3_*.llmc`` — written by the current compressor (codec byte: 0=AC,
-  1=rANS). Encode must stay byte-stable: any container-format or coder
-  drift shows up as a byte diff here before it silently corrupts
-  archives in the wild.
+  1=rANS; the default write version). Encode must stay byte-stable: any
+  container-format or coder drift shows up as a byte diff here before it
+  silently corrupts archives in the wild.
+* ``v4_*.llmc`` — the seekable format (index footer + xxh64 checksums)
+  written by ``container_version=4`` and by the compression service.
+  Byte-stable like v3, and additionally the index must keep verifying.
 
 All goldens use the deterministic, model-free ``GoldenPredictor`` and
 the fixed ``golden_tokens`` streams (tests/helpers.py), so no model
@@ -33,6 +36,12 @@ CASES = {
     "v3_rans_full.llmc": (dict(topk=0, codec="rans"),
                           golden_tokens(37, seed=77)),
     "v3_ac_topk.llmc": (dict(topk=8, codec="ac"), golden_tokens()),
+    "v4_rans_topk.llmc": (dict(topk=8, codec="rans", container_version=4),
+                          golden_tokens()),
+    "v4_rans_full.llmc": (dict(topk=0, codec="rans", container_version=4),
+                          golden_tokens(37, seed=77)),
+    "v4_ac_topk.llmc": (dict(topk=8, codec="ac", container_version=4),
+                        golden_tokens()),
 }
 
 
@@ -51,9 +60,10 @@ def test_golden_decodes(name):
 
 
 @pytest.mark.parametrize("name", [n for n in sorted(CASES)
-                                  if n.startswith("v3")])
-def test_v3_encode_byte_stable(name):
-    """Re-encoding the golden inputs must reproduce the golden bytes."""
+                                  if not n.startswith("v2")])
+def test_encode_byte_stable(name):
+    """Re-encoding the golden inputs must reproduce the golden bytes
+    (v3 and v4 — v2 is read-only and can no longer be written)."""
     kw, toks = CASES[name]
     blob, _ = _comp(kw).compress(toks)
     assert blob == (GOLDEN / name).read_bytes()
@@ -69,3 +79,24 @@ def test_v2_header_shape_frozen():
 def test_v3_header_carries_codec():
     assert (GOLDEN / "v3_rans_topk.llmc").read_bytes()[19] == 1
     assert (GOLDEN / "v3_ac_topk.llmc").read_bytes()[19] == 0
+
+
+def test_v4_goldens_carry_verified_index():
+    from repro.core import read_index
+    for name in sorted(CASES):
+        if not name.startswith("v4"):
+            continue
+        kw, toks = CASES[name]
+        blob = (GOLDEN / name).read_bytes()
+        info = read_index(blob)             # verifies footer checksum
+        assert blob[-4:] == b"LC4F"
+        assert info.n_chunks == len(info.entries)
+        assert sum(e.n_tokens for e in info.entries) == toks.size
+        # the encoder's batch shape is part of the coding geometry on
+        # non-batch-invariant models; v4 records the lane count every
+        # chunk ran at — min(decode_batch=4, n_chunks) for the grouped path
+        assert info.encode_batch == min(4, info.n_chunks)
+        # random access: last chunk alone
+        last = _comp(kw).decompress_range(blob, info.n_chunks - 1,
+                                          info.n_chunks)
+        assert np.array_equal(last, toks[(info.n_chunks - 1) * 16:])

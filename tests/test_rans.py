@@ -11,7 +11,8 @@ import pytest
 from _hypo import given, settings, st
 from helpers import GoldenPredictor, golden_tokens
 from repro.core import ac, rans
-from repro.core.compressor import CODEC_RANS, VERSION, LLMCompressor
+from repro.core.compressor import (CODEC_RANS, VERSION_V3,
+                                   VERSION_V4, LLMCompressor)
 from repro.core.cdf import pmf_to_cdf, quantize_pmf
 
 
@@ -135,6 +136,56 @@ def test_batched_matches_single_stream_bytes():
         assert batched[b] == rans.encode_sequence(syms[b], cdfs[b], 16)
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 10_000))
+def test_slot_encoder_matches_batched_bytes(batch, seed):
+    """SlotRansEncoder (per-slot LIFO recording + out-of-order flush, the
+    scheduler's encoder) must emit byte-identical streams to the batched
+    encoder for the same masked step script."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(0, 30, batch)
+    enc = rans.BatchedRansEncoder(batch)
+    slot_enc = rans.SlotRansEncoder(batch)
+    for t in range(int(lens.max(initial=0))):
+        m = lens > t
+        cdfs = np.stack([_rand_cdf(rng, 9, 14) for _ in range(batch)])
+        syms = rng.integers(0, 9, batch)
+        enc.put_symbols(syms, cdfs, 14, m)
+        slot_enc.put_symbols(syms, cdfs, 14, m)
+        em = m & (syms == 8)
+        esc = rng.integers(0, 100, batch)
+        if em.any():
+            enc.put_uniform(esc, rans.uniform_bits(100), em)
+            slot_enc.put_uniform(esc, rans.uniform_bits(100), em)
+    batched = enc.finish()
+    # flush in scrambled order — slots are independent
+    for b in rng.permutation(batch):
+        assert slot_enc.flush_slot(int(b)) == batched[b]
+        assert slot_enc.pending(int(b)) == 0
+
+
+def test_decoder_attach_detach_exhausted():
+    """Per-slot re-attachment: one decoder instance serves a sequence of
+    streams per slot, and `exhausted` certifies clean end-of-stream."""
+    rng = np.random.default_rng(7)
+    cdf = _rand_cdf(rng, 16, 16)
+    dec = rans.BatchedRansDecoder([b""] * 3)
+    assert dec.exhausted(0)
+    for trip in range(3):
+        syms = [int(s) for s in rng.integers(0, 16, 10 + trip)]
+        blob = rans.encode_sequence(syms, [cdf] * len(syms), 16)
+        slot = trip % 3
+        dec.attach(slot, blob)
+        m = np.zeros(3, bool)
+        m[slot] = True
+        got = [int(dec.get(np.broadcast_to(cdf, (3,) + cdf.shape), 16, m)[slot])
+               for _ in syms]
+        assert got == syms
+        assert dec.exhausted(slot)
+        dec.detach(slot)
+        assert dec.exhausted(slot)
+
+
 def test_zero_frequency_symbol_rejected():
     cdf = np.array([0, 5, 5, 1 << 16], np.int64)  # symbol 1 has zero mass
     enc = rans.BatchedRansEncoder(1)
@@ -167,7 +218,7 @@ def test_compressor_roundtrip_rans(topk):
     comp = LLMCompressor(pred, chunk_size=16, topk=topk, decode_batch=4,
                          codec="rans")
     blob, stats = comp.compress(toks)
-    assert blob[4] == VERSION
+    assert blob[4] == VERSION_V3   # default write: wire-minimal v3
     assert blob[19] == CODEC_RANS
     assert np.array_equal(comp.decompress(blob), toks)
     if topk:
