@@ -324,9 +324,28 @@ def service_throughput(quick=False):
     return res
 
 
+def decompress_throughput(quick=False):
+    """Speculative (draft/verify/accept) vs lock-step batched decode on
+    argmax-following text — DESIGN.md §9's tentpole. The >= 2x wall and
+    dispatch-ratio CI gates live in benchmarks/decompress_bench.py."""
+    from benchmarks.decompress_bench import run_bench
+    if quick:
+        res = run_bench(n_jobs=2, tokens=1024, slots=4, dispatch_ms=0.5)
+    else:
+        res = run_bench()
+    _csv("decompress_throughput",
+         1e6 / max(1e-9, res["spec_tok_per_s"]),
+         f"wall_speedup={res['wall_speedup']:.2f};"
+         f"dispatch_ratio={res['dispatch_ratio']:.2f};"
+         f"tok_per_s={res['spec_tok_per_s']:.0f}")
+    (RESULTS / "decompress_throughput.json").write_text(
+        json.dumps(res, indent=1))
+    return res
+
+
 ALL = [table2_information, table3_traditional, table5_main, fig_chunk_size,
        fig_model_size, fig_data_scale, fig9_human_vs_llm, fig8_domain_models,
-       coder_throughput, service_throughput]
+       coder_throughput, service_throughput, decompress_throughput]
 
 
 def main() -> None:

@@ -62,6 +62,16 @@ class TablePredictor:
         self.n_steps += 1
         return self._table[np.asarray(prev_tokens, np.int32)], state
 
+    # speculative decode hooks (decompress_bench.py): one verify forward
+    # scores all K+1 positions; counts as ONE model dispatch, which is
+    # exactly the economy speculation buys on a real accelerator
+    def verify_steps(self, state, seq):
+        self.n_steps += 1
+        return self._table[np.asarray(seq, np.int32)], state
+
+    def rollback(self, snapshots, accepted):
+        return snapshots
+
 
 def ragged_workload(rng, n_jobs: int, slots: int, chunk: int):
     """Job sizes spanning 1 token .. 2B chunks (the ISSUE's acceptance

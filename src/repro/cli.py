@@ -109,6 +109,13 @@ def _cmd_decompress(args) -> int:
                              precision=args.precision, codec="ac",
                              decode_batch=args.slots)
         toks = comp.decompress(blob)
+    elif args.draft:
+        # speculative grouped decode: draft/verify/accept (DESIGN.md §9),
+        # identical tokens, fewer model dispatches on predictable text
+        comp = LLMCompressor(pred, chunk_size=args.chunk, topk=args.topk,
+                             precision=args.precision,
+                             decode_batch=args.slots, draft_k=args.draft)
+        toks = comp.decompress(blob)
     else:
         toks = _service(args, pred).submit_decompress(blob).result()
     open(args.output, "wb").write(decode(toks))
@@ -118,11 +125,15 @@ def _cmd_decompress(args) -> int:
 
 
 def _cmd_range(args) -> int:
-    from repro.core import LLMCompressor, read_index
+    from repro.core import ContainerError, LLMCompressor, read_index
     from repro.data.tokenizer import decode
     blob = open(args.input, "rb").read()
     info = read_index(blob)
-    lo, hi = (int(x) for x in args.chunks.split(":"))
+    try:
+        lo, hi = (int(x) for x in args.chunks.split(":"))
+    except ValueError:
+        raise SystemExit(f"llmc: --chunks expects LO:HI integers, "
+                         f"got {args.chunks!r}")
     if args.slots and info.encode_batch and args.slots != info.encode_batch:
         print(f"llmc: note: range decode runs at the container's recorded "
               f"encode batch ({info.encode_batch}); --slots {args.slots} "
@@ -132,7 +143,12 @@ def _cmd_range(args) -> int:
                          precision=info.precision,
                          decode_batch=args.slots or info.encode_batch or 16)
     t0 = time.time()
-    toks = comp.decompress_range(blob, lo, hi)
+    try:
+        toks = comp.decompress_range(blob, lo, hi)
+    except ContainerError as e:
+        # empty/reversed/out-of-bounds ranges and corrupt containers all
+        # arrive here with a precise message — never a bare IndexError
+        raise SystemExit(f"llmc: {e}")
     open(args.output, "wb").write(decode(toks))
     print(f"chunks [{lo}, {hi}) -> {toks.size} tokens "
           f"({time.time() - t0:.1f}s)")
@@ -167,6 +183,9 @@ def main(argv=None) -> int:
 
     p = sub.add_parser("decompress", help=".llmc container -> file")
     common(p)
+    p.add_argument("--draft", type=int, default=0, metavar="K",
+                   help="speculative decode: self-draft K tokens per "
+                        "verify forward (0 = lock-step)")
     p.set_defaults(fn=_cmd_decompress)
 
     p = sub.add_parser("range", help="random-access decode (v4 only)")

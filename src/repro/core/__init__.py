@@ -8,6 +8,7 @@ from .compressor import (ChunkEntry, CompressionStats, ContainerError,
                          ContainerInfo, LLMCompressor, PredictorAdapter,
                          parse_container, read_header, read_index,
                          write_container)
+from .draft import ConstantDraft, DraftProposer, OracleDraft, SuffixDraft
 from .rans import BatchedRansDecoder, BatchedRansEncoder, SlotRansEncoder
 
 __all__ = [
@@ -17,5 +18,6 @@ __all__ = [
     "topk_quantized", "xxh64",
     "ChunkEntry", "CompressionStats", "ContainerError", "ContainerInfo",
     "LLMCompressor", "PredictorAdapter",
+    "ConstantDraft", "DraftProposer", "OracleDraft", "SuffixDraft",
     "parse_container", "read_header", "read_index", "write_container",
 ]

@@ -103,6 +103,85 @@ def topk_quantized(logits: jnp.ndarray, k: int,
 topk_quantized_jit = jax.jit(topk_quantized, static_argnums=(1, 2))
 
 
+def topk_cdf(logits: jnp.ndarray, k: int,
+             precision: int = DEFAULT_PRECISION):
+    """Fused top-K selection + quantization + **integer CDF build** in one
+    device computation: returns (ids (..., k) int32, cdf (..., k+2) int32)
+    with cdf[..., 0] == 0 and cdf[..., -1] == 2**precision.
+
+    The CDF rows are bit-identical to the host path
+    ``pmf_to_cdf(topk_quantized(logits, k, precision)[1])``: the pmf is the
+    same float computation and the cumsum is exact integer arithmetic
+    (2**precision <= 2**23 fits int32), so golden containers are
+    unaffected. This is what removes the per-step host-side
+    ``pmf_to_cdf`` slicing from the decode loops; on TPU the same
+    transform runs as the fused Pallas kernel (kernels/ac_cdf.py
+    ``topk_cdf_points``)."""
+    ids, q = topk_quantized(logits, k, precision)
+    zero = jnp.zeros_like(q[..., :1])
+    cdf = jnp.concatenate([zero, jnp.cumsum(q, axis=-1)], axis=-1)
+    return ids, cdf
+
+
+topk_cdf_jit = jax.jit(topk_cdf, static_argnums=(1, 2))
+
+
+def topk_cdf_lookup(logits: jnp.ndarray, slots: jnp.ndarray, k: int,
+                    precision: int = DEFAULT_PRECISION):
+    """Fused decode step: top-K + CDF build + **symbol-interval lookup**
+    for the rANS decoder's peeked slot bits, all on device.
+
+    ``slots`` (...,) int32 are the coder states' low ``precision`` bits
+    (``BatchedRansDecoder.peek``). Returns (ids, cdf, syms, starts,
+    freqs): syms[i] is the unique s with cdf[s] <= slot < cdf[s+1]
+    (s == k means ESCAPE), and (starts, freqs) are that symbol's interval
+    — exactly what ``BatchedRansDecoder.advance`` consumes."""
+    ids, cdf = topk_cdf(logits, k, precision)
+    syms = jnp.sum((cdf[..., 1:] <= slots[..., None]).astype(jnp.int32),
+                   axis=-1)
+    starts = jnp.take_along_axis(cdf, syms[..., None], axis=-1)[..., 0]
+    ends = jnp.take_along_axis(cdf, syms[..., None] + 1, axis=-1)[..., 0]
+    return ids, cdf, syms, starts, ends - starts
+
+
+topk_cdf_lookup_jit = jax.jit(topk_cdf_lookup, static_argnums=(2, 3))
+
+
+def full_cdf(logits: jnp.ndarray, precision: int = DEFAULT_PRECISION):
+    """Full-vocabulary quantized CDF rows (..., V+1) int32 built entirely
+    on device (leading 0 included) — bit-identical integers to the host
+    ``logits_to_cdf`` (the interior points are the same cumulative-rounding
+    values; no diff+recumsum detour)."""
+    pts = quantize_cdf_points(_full_pmf(logits), precision)
+    zero = jnp.zeros_like(pts[..., :1])
+    return jnp.concatenate([zero, pts], axis=-1)
+
+
+full_cdf_jit = jax.jit(full_cdf, static_argnums=(1,))
+
+
+def full_cdf_lookup(logits: jnp.ndarray, slots: jnp.ndarray,
+                    precision: int = DEFAULT_PRECISION):
+    """Full-vocabulary analog of ``topk_cdf_lookup``: quantized-CDF build
+    + symbol-interval lookup on device (no (B, V+1) host cumsum in the
+    decode loop). Returns (syms, starts, freqs) — the decoded symbols ARE
+    the token ids here. Bit-identical to searching the host
+    ``logits_to_cdf`` rows: the interior points are the same integers."""
+    pts = quantize_cdf_points(_full_pmf(logits), precision)   # (..., V)
+    syms = jax.vmap(lambda p, s: jnp.searchsorted(p, s, side="right"))(
+        pts.reshape(-1, pts.shape[-1]),
+        slots.astype(pts.dtype).reshape(-1)).reshape(slots.shape)
+    starts = jnp.where(
+        syms > 0,
+        jnp.take_along_axis(pts, jnp.maximum(syms - 1, 0)[..., None],
+                            axis=-1)[..., 0], 0)
+    ends = jnp.take_along_axis(pts, syms[..., None], axis=-1)[..., 0]
+    return syms, starts, ends - starts
+
+
+full_cdf_lookup_jit = jax.jit(full_cdf_lookup, static_argnums=(2,))
+
+
 def topk_quantized_sharded(logits, k: int, precision: int, mesh,
                            batch_axes=("data",)):
     """Hierarchical top-K + escape quantization for VOCAB-SHARDED logits.

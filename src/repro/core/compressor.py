@@ -78,9 +78,11 @@ from typing import Callable, Protocol
 import numpy as np
 
 from . import ac, rans
-from .cdf import (DEFAULT_PRECISION, build_topk_cdfs, logits_to_cdf,
-                  pmf_to_cdf, topk_quantized_jit)
+from .cdf import (DEFAULT_PRECISION, build_topk_cdfs, full_cdf_jit,
+                  full_cdf_lookup_jit, logits_to_cdf, pmf_to_cdf,
+                  topk_cdf_jit, topk_cdf_lookup_jit, topk_quantized_jit)
 from .checksum import xxh64
+from .draft import SuffixDraft
 
 MAGIC = b"LLMC"
 VERSION_V3 = 3
@@ -193,8 +195,10 @@ class ContainerInfo:
 
 
 def chunk_valid_lengths(n_tokens: int, chunk_size: int) -> np.ndarray:
-    """Valid token count per chunk for a contiguous n_tokens stream."""
-    n_chunks = max(1, -(-n_tokens // chunk_size))
+    """Valid token count per chunk for a contiguous n_tokens stream.
+    Zero tokens means zero chunks (an empty container has an empty body),
+    so the returned array is empty — callers must not assume max()."""
+    n_chunks = -(-n_tokens // chunk_size)
     ends = np.minimum(np.arange(1, n_chunks + 1) * chunk_size, n_tokens)
     starts = np.arange(n_chunks) * chunk_size
     return np.maximum(ends - starts, 0).astype(np.int64)
@@ -237,7 +241,7 @@ def read_header(blob: bytes) -> ContainerInfo:
         raise ContainerError(
             f"corrupt header: precision {precision} too small for "
             f"{'top-' + str(topk) if topk else 'vocab ' + str(vocab)} alphabet")
-    n_chunks = max(1, -(-n // C))
+    n_chunks = -(-n // C)                # 0 tokens => 0 chunks
     return ContainerInfo(version, flags, C, n, vocab, topk, precision,
                          codec, hsize, n_chunks)
 
@@ -411,7 +415,9 @@ class LLMCompressor:
                  precision: int = DEFAULT_PRECISION,
                  decode_batch: int = 64,
                  codec: str = "rans",
-                 container_version: int = VERSION_V3):
+                 container_version: int = VERSION_V3,
+                 draft_k: int = 0,
+                 draft=None):
         if topk and topk >= predictor.vocab_size:
             topk = 0
         if codec not in CODEC_IDS:
@@ -436,6 +442,21 @@ class LLMCompressor:
                              f"limit {rans.MAX_PRECISION}")
         # escape symbols: AC codes exactly over V; rANS over 2**esc_bits >= V
         self._esc_bits = rans.uniform_bits(predictor.vocab_size)
+        # Speculative decompression (DESIGN.md §9): draft_k > 0 turns on
+        # the draft/verify/accept decode path for rANS containers when the
+        # predictor exposes verify_steps/rollback (serve.ModelPredictor and
+        # the table predictors do). Decoded tokens are identical either
+        # way — the coded stream arbitrates every position — so this is
+        # purely a wall-clock knob.
+        self.draft_k = int(draft_k)
+        self.draft = draft if draft is not None else SuffixDraft()
+        # adaptive fallthrough: after _spec_window rounds, drop to
+        # lock-step for the rest of the group if fewer than _spec_floor
+        # drafted tokens per round were accepted (adversarial or
+        # unpredictable streams must never pay the (K+1)-deep verify
+        # forward for a 1-token/round yield indefinitely)
+        self._spec_window = 8
+        self._spec_floor = 0.75
 
     # ------------------------------------------------------------- compress
     def compress(self, tokens: np.ndarray, *,
@@ -454,7 +475,7 @@ class LLMCompressor:
         tokens = np.asarray(tokens, dtype=np.int32).ravel()
         n = tokens.size
         C = self.chunk_size
-        n_chunks = max(1, -(-n // C))
+        n_chunks = -(-n // C)            # 0 tokens => 0 chunks, no model
         padded = np.zeros(n_chunks * C, dtype=np.int32)
         padded[:n] = tokens
         chunks = padded.reshape(n_chunks, C)
@@ -467,7 +488,7 @@ class LLMCompressor:
         # shrinking the program — and the count recorded in the v4 footer
         # is therefore exactly what every chunk was encoded at.
         B = min(self.decode_batch, n_chunks)
-        for i in range(0, n_chunks, B):
+        for i in range(0, n_chunks, max(1, B)):
             batch = chunks[i:i + B]
             nb = batch.shape[0]
             if nb < B:
@@ -606,6 +627,8 @@ class LLMCompressor:
     def decompress(self, blob: bytes) -> np.ndarray:
         info, streams = parse_container(blob)
         self._check_config(info)
+        if info.n_chunks == 0:           # valid empty container
+            return np.zeros(0, np.int32)
         valid = np.array([e.n_tokens for e in info.entries], np.int64)
         C = self.chunk_size
         out = np.zeros(info.n_chunks * C, dtype=np.int32)
@@ -620,7 +643,8 @@ class LLMCompressor:
             if ng < B:
                 group = group + [b""] * (B - ng)
                 v = np.concatenate([v, np.zeros(B - ng, np.int64)])
-            dec_tokens = self._decode_group(group, v, info.codec)
+            dec_tokens = self._decode_group(group, v, info.codec,
+                                            chunk_offset=i)
             out[i * C:(i + ng) * C] = dec_tokens[:ng].ravel()
         return out[:info.n_tokens]
 
@@ -644,10 +668,15 @@ class LLMCompressor:
         self._check_config(info)
         if chunk_stop is None:
             chunk_stop = chunk_start + 1
-        if not 0 <= chunk_start < chunk_stop <= info.n_chunks:
-            raise IndexError(
-                f"chunk range [{chunk_start}, {chunk_stop}) outside "
-                f"[0, {info.n_chunks})")
+        if chunk_start >= chunk_stop:
+            raise ContainerError(
+                f"invalid chunk range [{chunk_start}, {chunk_stop}): "
+                + ("empty" if chunk_start == chunk_stop else "reversed")
+                + " range selects no chunks")
+        if chunk_start < 0 or chunk_stop > info.n_chunks:
+            raise ContainerError(
+                f"chunk range [{chunk_start}, {chunk_stop}) out of bounds: "
+                f"container has chunks [0, {info.n_chunks})")
         B = info.encode_batch or min(self.decode_batch, info.n_chunks)
         C = self.chunk_size
         out = np.zeros((chunk_stop - chunk_start) * C, dtype=np.int32)
@@ -677,8 +706,12 @@ class LLMCompressor:
     # Decode groups take explicit per-stream valid lengths (slot-resumable
     # form): the same inner loops serve full decompress, range decode, and
     # the continuous-batching scheduler's drain path.
-    def _decode_group(self, streams, valid: np.ndarray, codec: int):
+    def _decode_group(self, streams, valid: np.ndarray, codec: int,
+                      chunk_offset: int = 0):
         if codec == CODEC_RANS:
+            if self.draft_k > 0 and hasattr(self.predictor, "verify_steps"):
+                return self._decode_group_rans_spec(streams, valid,
+                                                    chunk_offset)
             return self._decode_group_rans(streams, valid)
         return self._decode_group_ac(streams, valid)
 
@@ -689,9 +722,74 @@ class LLMCompressor:
         prev = np.full((B,), self.predictor.bos_id, dtype=np.int32)
         return state, prev
 
+    def _coder_decode_step(self, dec, logits, m):
+        """One vectorized entropy-decode step for the lanes in ``m``:
+        fused on-device top-k → quantized CDF → symbol-interval lookup on
+        the coder's peeked slot bits (kernels/ac_cdf.py on TPU), then one
+        host ``advance``. Bit-identical to the former host path (the CDF
+        integers are the same — see cdf.topk_cdf); what changed is that
+        no (B, K+2) cumsum or per-row search runs on the host anymore.
+        Returns decoded token ids (B,) int64 (0 on inactive lanes)."""
+        slots_bits = dec.peek(self.precision)
+        if self.topk:
+            ids, _, slots, starts, freqs = (np.asarray(a) for a in
+                                            topk_cdf_lookup_jit(
+                logits, slots_bits.astype(np.int32), self.topk,
+                self.precision))
+            dec.advance(slots, starts, freqs, self.precision, m)
+            esc = m & (slots == self.topk)
+            syms = np.take_along_axis(
+                ids, np.minimum(slots, self.topk - 1)[:, None],
+                axis=-1)[:, 0].astype(np.int64)
+            if esc.any():
+                u = dec.get_uniform(self._esc_bits, esc)
+                syms = np.where(esc, u, syms)
+        else:
+            syms, starts, freqs = (np.asarray(a) for a in full_cdf_lookup_jit(
+                logits, slots_bits.astype(np.int32), self.precision))
+            syms = syms.astype(np.int64)
+            dec.advance(syms, starts, freqs, self.precision, m)
+        return np.where(m, syms, 0)
+
+    def _round_cdfs(self, logits):
+        """Build every CDF row a speculative round can consume in ONE
+        device dispatch: ``logits`` (B, K+1, V) -> (ids (B, K+1, k) or
+        None, cdf (B, K+1, A+1) int64) where A is the coded alphabet
+        (top-k + escape, or V). The integers are exactly the rows the
+        fused per-step lookup would build — interval search over
+        identical integers is exact — so batching the build per round
+        instead of per position changes dispatch count, not bits."""
+        if self.topk:
+            ids, cdf = topk_cdf_jit(logits, self.topk, self.precision)
+            return np.asarray(ids), np.asarray(cdf, np.int64)
+        return None, np.asarray(full_cdf_jit(logits, self.precision),
+                                np.int64)
+
+    def _coder_decode_host(self, dec, ids, cdf, m):
+        """One vectorized entropy-decode step against PREBUILT integer CDF
+        rows (``_round_cdfs``): host interval search on the peeked slot
+        bits + one ``advance``. The speculative inner loop uses this so a
+        round of K+1 positions costs one device dispatch total rather
+        than one per position. cdf[:, -1] == 2**precision > slot always,
+        so the right-edge sentinel never matches."""
+        slot = dec.peek(self.precision)
+        lanes = np.arange(cdf.shape[0])
+        syms = (cdf[:, 1:-1] <= slot[:, None]).sum(axis=1, dtype=np.int64)
+        dec.advance(syms, cdf[lanes, syms],
+                    cdf[lanes, syms + 1] - cdf[lanes, syms],
+                    self.precision, m)
+        if ids is not None:
+            esc = m & (syms == self.topk)
+            syms = ids[lanes, np.minimum(syms, self.topk - 1)].astype(
+                np.int64)
+            if esc.any():
+                u = dec.get_uniform(self._esc_bits, esc)
+                syms = np.where(esc, u, syms)
+        return np.where(m, syms, 0)
+
     def _decode_group_rans(self, streams, valid):
-        """Lock-step batched decode: one model step + one vectorized coder
-        step (plus a masked escape step) per token position."""
+        """Lock-step batched decode: one model step + one fused CDF/lookup
+        dispatch + one vectorized coder step per token position."""
         B, C = len(streams), self.chunk_size
         valid = np.asarray(valid, np.int64)
         dec = rans.BatchedRansDecoder(streams)
@@ -699,28 +797,92 @@ class LLMCompressor:
         state, prev = self._begin_group(B, C)
         for t in range(int(valid.max(initial=0))):
             logits, state = self.predictor.decode_step(state, prev)
-            logits = np.asarray(logits)
             m = valid > t
-            if self.topk:
-                ids, qpmf = topk_quantized_jit(logits, self.topk,
-                                               self.precision)
-                ids = np.asarray(ids)
-                cdfs = pmf_to_cdf(np.asarray(qpmf))            # (B, K+2)
-                slots = dec.get(cdfs, self.precision, m)
-                esc = m & (slots == self.topk)
-                syms = np.take_along_axis(
-                    ids, np.minimum(slots, self.topk - 1)[:, None],
-                    axis=-1)[:, 0].astype(np.int64)
-                if esc.any():
-                    u = dec.get_uniform(self._esc_bits, esc)
-                    syms = np.where(esc, u, syms)
-            else:
-                cdfs = logits_to_cdf(logits, self.precision)   # (B, V+1)
-                syms = dec.get(cdfs, self.precision, m)
+            syms = self._coder_decode_step(dec, np.asarray(logits), m)
             nxt = np.where(m, syms, 0).astype(np.int32)
             tokens[:, t] = nxt
             prev = nxt
         return tokens
+
+    def _decode_group_rans_spec(self, streams, valid, chunk_offset=0):
+        """Speculative batched decode (DESIGN.md §9): per round, a cheap
+        self-draft proposes K tokens per lane, ONE verify dispatch scores
+        all K+1 positions (predictor.verify_steps — bit-identical to K+1
+        lock-step calls by construction), and the rANS decoder accepts
+        greedily against the coded stream. A lane keeps consuming verify
+        logits while its decoded token matches its draft; the first
+        mismatch still yields a correct token (the coder decoded it from
+        the real stream — acceptance is exact, not probabilistic), after
+        which the lane waits for the next round. Lanes that match all K
+        drafts decode a bonus (K+1)-th token from the last verify slot.
+        ``predictor.rollback`` then rewinds each lane's cache to its
+        accepted frontier. Worst case (every draft wrong) each round
+        still decodes 1 token/lane — the lock-step rate — and the
+        adaptive fallthrough stops paying the deeper verify forward."""
+        B, C = len(streams), self.chunk_size
+        K = self.draft_k
+        valid = np.asarray(valid, np.int64)
+        dec = rans.BatchedRansDecoder(streams)
+        tokens = np.zeros((B, C), dtype=np.int32)
+        state, prev = self._begin_group(B, C)
+        pos = np.zeros(B, np.int64)
+        if hasattr(self.draft, "begin_group"):
+            self.draft.begin_group(chunk_offset)
+        rounds = drafted_hits = 0
+        lanes = np.arange(B)
+        while True:
+            active = pos < valid
+            if not active.any():
+                break
+            if rounds >= self._spec_window and \
+                    drafted_hits < self._spec_floor * rounds:
+                self._lockstep_tail(dec, state, prev, pos, valid, tokens)
+                break
+            drafts = np.clip(
+                self.draft.propose(tokens, pos, K), 0,
+                self.predictor.vocab_size - 1).astype(np.int32)
+            seq = np.concatenate([prev[:, None], drafts], axis=1)
+            logits, snaps = self.predictor.verify_steps(state, seq)
+            ids_a, cdf_a = self._round_cdfs(np.asarray(logits))
+            acc = np.zeros(B, np.int64)
+            chain = active.copy()
+            for j in range(K + 1):
+                mj = chain & (pos + j < valid)
+                if not mj.any():
+                    break
+                syms = self._coder_decode_host(
+                    dec, None if ids_a is None else ids_a[:, j],
+                    cdf_a[:, j], mj)
+                tokens[mj, (pos + j)[mj]] = syms[mj]
+                acc[mj] += 1
+                chain = mj & (syms == drafts[:, j]) if j < K else \
+                    np.zeros(B, bool)
+            # lane b resumed from the snapshot after acc[b] verify inputs:
+            # [prev, d_0..d_{acc-2}] — the acc'th accepted token is NOT
+            # fed back here; it is the next round's `prev`
+            state = self.predictor.rollback(snaps, acc.astype(np.int32))
+            pos += acc
+            prev = np.where(acc > 0, tokens[lanes, np.maximum(pos - 1, 0)],
+                            prev).astype(np.int32)
+            rounds += 1
+            drafted_hits += int(np.maximum(acc - 1, 0).sum())
+        return tokens
+
+    def _lockstep_tail(self, dec, state, prev, pos, valid, tokens):
+        """Finish a group lock-step from per-lane positions — the
+        speculative path's fallthrough when drafts stop earning their
+        verify depth. Mutates pos/tokens in place."""
+        B = tokens.shape[0]
+        lanes = np.arange(B)
+        while True:
+            m = pos < valid
+            if not m.any():
+                return
+            logits, state = self.predictor.decode_step(state, prev)
+            syms = self._coder_decode_step(dec, np.asarray(logits), m)
+            tokens[m, pos[m]] = syms[m]
+            pos += m
+            prev = np.where(m, syms, prev).astype(np.int32)
 
     def _decode_group_ac(self, streams, valid):
         """Legacy per-stream arithmetic decode (reference codec + v2)."""

@@ -297,23 +297,42 @@ class BatchedRansDecoder:
             active[idx] = ((self._x[idx] < _U64(RANS_L))
                            & (self._cur[idx] < self._lens[idx]))
 
+    def peek(self, bits: int) -> np.ndarray:
+        """Low ``bits`` of every stream's coder state — the slot values a
+        symbol-interval lookup (host `_find_slots` or the fused on-device
+        kernel) resolves to symbols. Does not consume anything."""
+        return (self._x & _U64((1 << bits) - 1)).astype(np.int64)
+
+    def advance(self, syms, starts, freqs, bits: int, mask=None) -> np.ndarray:
+        """Consume one symbol per active stream given its already-resolved
+        (symbol, start, freq) interval — the second half of ``get`` for
+        callers that run the interval lookup elsewhere (e.g. on device in
+        the fused top-k→CDF→lookup kernel). The interval MUST correspond
+        to this stream's current ``peek(bits)`` slot."""
+        B = self._x.shape[0]
+        mask = np.ones(B, bool) if mask is None else np.asarray(mask, bool)
+        slots = (self._x & _U64((1 << bits) - 1)).astype(np.int64)
+        syms = np.where(mask, np.asarray(syms, np.int64), 0)
+        starts = np.where(mask, np.asarray(starts, np.int64), 0)
+        freqs = np.where(mask, np.asarray(freqs, np.int64), 1)
+        nx = (_as_u64(freqs) * (self._x >> _U64(bits))
+              + _as_u64(slots) - _as_u64(starts))
+        self._x = np.where(mask, nx, self._x)
+        self._renorm(mask)
+        return syms
+
     def get(self, cdfs: np.ndarray, bits: int, mask=None) -> np.ndarray:
         """Decode one symbol per active stream under CDF rows cdfs
         (B, n+1) with total 2**bits. Inactive lanes return 0 untouched."""
         B = self._x.shape[0]
         mask = np.ones(B, bool) if mask is None else np.asarray(mask, bool)
         cdfs = np.asarray(cdfs, np.int64)
-        slots = (self._x & _U64((1 << bits) - 1)).astype(np.int64)
+        slots = self.peek(bits)
         syms = _find_slots(cdfs, slots)
         syms = np.where(mask, syms, 0)
         starts = np.take_along_axis(cdfs, syms[:, None], axis=1)[:, 0]
         ends = np.take_along_axis(cdfs, syms[:, None] + 1, axis=1)[:, 0]
-        freqs = _as_u64(ends - starts)
-        nx = (freqs * (self._x >> _U64(bits))
-              + _as_u64(slots) - _as_u64(starts))
-        self._x = np.where(mask, nx, self._x)
-        self._renorm(mask)
-        return syms
+        return self.advance(syms, starts, ends - starts, bits, mask)
 
     def get_uniform(self, bits: int, mask=None) -> np.ndarray:
         """Decode one uniform-over-2**bits symbol per active stream."""

@@ -12,6 +12,15 @@ Quantization is **cumulative rounding** (see core/cdf.py): strictly
 monotone, exact total, streaming. Grid (B, 2, nv): pass 0 reduces, pass 1
 emits; the pass axis is sequential so scratch carries across.
 
+Two kernels share the layout:
+
+* ``cdf_points``      — full-vocabulary CDF interior points (B, V);
+* ``topk_cdf_points`` — fused top-k selection -> (k+1)-symbol quantized
+  CDF (+ escape), the device form of ``core.cdf.topk_cdf``: pass 0 also
+  merges each block's candidates into a running top-k scratch, pass 1
+  emits (ids, cdf) once — the decode loops stop paying a host-side
+  ``top_k``/``pmf_to_cdf`` per step.
+
 For padded vocabularies the caller masks pad logits to -inf upstream;
 exp(-inf - max) = 0 contributes nothing and pad symbols get exactly one
 quantum each (they are never coded).
@@ -30,7 +39,7 @@ from .compat import CompilerParams
 NEG_INF = -1e30
 
 
-def _cdf_kernel(logits_ref, out_ref, m_ref, s_ref, c_ref, *,
+def _cdf_kernel(logits_ref, out_ref, m_ref, s_ref, c_ref, p_ref, *,
                 block_v, nv, budget):
     p = pl.program_id(1)       # pass: 0 = reduce, 1 = emit
     j = pl.program_id(2)       # vocab block
@@ -40,6 +49,7 @@ def _cdf_kernel(logits_ref, out_ref, m_ref, s_ref, c_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         s_ref[...] = jnp.zeros_like(s_ref)
         c_ref[...] = jnp.zeros_like(c_ref)
+        p_ref[...] = jnp.zeros_like(p_ref)
 
     x = logits_ref[0].astype(jnp.float32)              # (1, block_v)
 
@@ -57,11 +67,25 @@ def _cdf_kernel(logits_ref, out_ref, m_ref, s_ref, c_ref, *,
         probs = jnp.exp(x - m) / s                     # normalized block pmf
         cum = c_ref[...] + jnp.cumsum(probs, axis=-1)  # global prefix
         c_ref[...] = cum[:, -1:]
-        idx = j * block_v + jax.lax.broadcasted_iota(
-            jnp.int32, cum.shape, 1)
+        local = jax.lax.broadcasted_iota(jnp.int32, cum.shape, 1)
+        idx = j * block_v + local
         pts = jnp.floor(cum * budget + 0.5).astype(jnp.int32) + idx + 1
-        # clamp the tail to the exact total (float cumsum may drift a ulp)
+        # Exactness clamps. The float prefix can drift either way, and a
+        # coder CDF must end at exactly 2**precision with strictly
+        # increasing points — "off by one at the tail" corrupts streams:
+        #   * upper: drift above 1.0 would overshoot the budget;
+        #   * lower: drift DOWN across a block boundary would emit a point
+        #     <= the previous block's last point (p_ref carries it), so
+        #     force >= prev_last + 1 + local (strictly increasing, and
+        #     never above the upper clamp: prev_last <= budget + j*block_v
+        #     by the upper clamp of the previous block);
+        #   * tail: the final point is forced to exactly budget + V —
+        #     clamping down (the old code) never pulled a short tail UP.
         pts = jnp.minimum(pts, jnp.int32(budget) + idx + 1)
+        pts = jnp.maximum(pts, p_ref[...] + 1 + local)
+        pts = jnp.where((j == nv - 1) & (local == block_v - 1),
+                        jnp.int32(budget) + jnp.int32(nv * block_v), pts)
+        p_ref[...] = pts[:, -1:]
         out_ref[...] = pts
 
 
@@ -86,6 +110,117 @@ def cdf_points(logits, precision: int, *, block_v=2048, interpret=False):
             pltpu.VMEM((1, 1), jnp.float32),   # running max
             pltpu.VMEM((1, 1), jnp.float32),   # running sum (scaled)
             pltpu.VMEM((1, 1), jnp.float32),   # running prefix of cum prob
+            pltpu.VMEM((1, 1), jnp.int32),     # previous block's last point
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(logits)
+
+
+def _topk_cdf_kernel(logits_ref, ids_ref, cdf_ref, m_ref, s_ref,
+                     vals_ref, tids_ref, *, block_v, nv, k, budget):
+    p = pl.program_id(1)       # pass: 0 = reduce + top-k merge, 1 = emit
+    j = pl.program_id(2)       # vocab block
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        tids_ref[...] = jnp.zeros_like(tids_ref)
+
+    x = logits_ref[...].astype(jnp.float32)            # (1, block_v)
+
+    @pl.when(p == 0)
+    def _reduce():
+        m_prev, s_prev = m_ref[...], s_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(x, axis=-1, keepdims=True))
+        s_ref[...] = s_prev * jnp.exp(m_prev - m_new) + \
+            jnp.sum(jnp.exp(x - m_new), axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        # merge this block's candidates into the running top-k scratch by
+        # k extract-max rounds over [scratch | block]. Scratch-first order
+        # + first-index argmax reproduce lax.top_k's tie rule (smallest
+        # vocab id wins): scratch entries carry smaller global ids than
+        # this block, and were themselves appended in id order.
+        work = jnp.concatenate([vals_ref[...], x], axis=-1)  # (1, k+block_v)
+        gid = j * block_v + jax.lax.broadcasted_iota(
+            jnp.int32, x.shape, 1)
+        wid = jnp.concatenate([tids_ref[...], gid], axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, work.shape, 1)
+        n = jnp.int32(work.shape[-1])
+        new_v, new_i = [], []
+        for _ in range(k):
+            mx = jnp.max(work, axis=-1, keepdims=True)
+            pos = jnp.min(jnp.where(work == mx, iota, n), axis=-1,
+                          keepdims=True)
+            sel = iota == pos
+            new_v.append(mx)
+            new_i.append(jnp.sum(jnp.where(sel, wid, 0), axis=-1,
+                                 keepdims=True))
+            work = jnp.where(sel, NEG_INF, work)
+        vals_ref[...] = jnp.concatenate(new_v, axis=-1)
+        tids_ref[...] = jnp.concatenate(new_i, axis=-1)
+
+    @pl.when((p == 1) & (j == 0))
+    def _emit():
+        # mirrors core.cdf.topk_quantized + quantize_cdf_points on the
+        # (k+1)-symbol alphabet, term for term — with one vocab block the
+        # scratch (m, s, top-k) equals the host's flat reduction and the
+        # emitted integers are bit-identical to the host path
+        m, s = m_ref[...], s_ref[...]
+        top_p = jnp.exp(vals_ref[...] - m) / s                   # (1, k)
+        esc = jnp.clip(1.0 - jnp.sum(top_p, axis=-1, keepdims=True),
+                       0.0, 1.0)
+        pmf = jnp.concatenate([top_p, esc], axis=-1)             # (1, k+1)
+        pmf = pmf / jnp.sum(pmf, axis=-1, keepdims=True)
+        cum = jnp.cumsum(pmf, axis=-1)
+        cum = cum / cum[:, -1:]
+        idx = jax.lax.broadcasted_iota(jnp.int32, cum.shape, 1)
+        pts = jnp.floor(cum * budget + 0.5).astype(jnp.int32) + idx + 1
+        ids_ref[...] = tids_ref[...]
+        cdf_ref[...] = jnp.concatenate(
+            [jnp.zeros_like(pts[:, :1]), pts], axis=-1)          # (1, k+2)
+
+
+def topk_cdf_points(logits, k: int, precision: int, *, block_v=2048,
+                    interpret=False):
+    """Fused top-k selection -> quantized (k+1)-symbol CDF: logits (B, V)
+    -> (ids (B, k) int32, cdf (B, k+2) int32) with cdf[:, 0] == 0 and
+    cdf[:, -1] == 2**precision — the device version of
+    ``core.cdf.topk_cdf`` (one HBM pass over the logits; no V-sized
+    intermediate, no host pmf cumsum per decode step).
+
+    Caveat: ids match ``lax.top_k`` exactly when at least k logits exceed
+    the NEG_INF sentinel; rows padded below that (all-(-inf) tails wider
+    than V - k) may order their zero-probability slots differently.
+    """
+    B, V = logits.shape
+    block_v = min(block_v, V)
+    assert V % block_v == 0
+    nv = V // block_v
+    budget = float((1 << precision) - (k + 1))
+
+    kernel = functools.partial(_topk_cdf_kernel, block_v=block_v, nv=nv,
+                               k=k, budget=budget)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, 2, nv),
+        in_specs=[pl.BlockSpec((1, block_v), lambda b, p, j: (b, j))],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, p, j: (b, 0)),
+            pl.BlockSpec((1, k + 2), lambda b, p, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k + 2), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),   # running max
+            pltpu.VMEM((1, 1), jnp.float32),   # running sum (scaled)
+            pltpu.VMEM((1, k), jnp.float32),   # running top-k values
+            pltpu.VMEM((1, k), jnp.int32),     # running top-k vocab ids
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),

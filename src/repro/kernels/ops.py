@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .ac_cdf import cdf_points as _cdf_points
+from .ac_cdf import topk_cdf_points as _topk_cdf_points
 from .decode_attention import decode_attention as _decode_attention
 from .flash_attention import flash_attention as _flash_attention
 from .ssd_scan import ssd_intra as _ssd_intra
@@ -58,3 +59,12 @@ def cdf_points(logits, precision: int = 16, *, impl="auto"):
         return _ref.cdf_quantize_ref(p, precision)
     interp = impl == "interpret" or not _on_tpu()
     return _cdf_points(logits, precision, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("k", "precision", "impl"))
+def topk_cdf(logits, k: int, precision: int = 16, *, impl="auto"):
+    """Fused top-k + escape quantized CDF: (ids (B,k), cdf (B,k+2))."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.topk_cdf_ref(logits, k, precision)
+    interp = impl == "interpret" or not _on_tpu()
+    return _topk_cdf_points(logits, k, precision, interpret=interp)

@@ -75,3 +75,114 @@ def cdf_quantize_ref(probs_unnorm, precision: int):
     cum = cum / cum[..., -1:]
     pts = jnp.floor(cum * budget + 0.5).astype(jnp.int32)
     return pts + (1 + jnp.arange(V, dtype=jnp.int32))
+
+
+def cdf_quantize_blocked_ref(logits, precision: int, block_v: int):
+    """Blocked-accumulation oracle for ac_cdf._cdf_kernel: same running
+    (max, scaled-sum) softmax, same per-block float prefix carry, same
+    exactness clamps — term for term, so the kernel must match it
+    BIT-identically (flat vs blocked float cumsum differ by ulps, which
+    is why cdf_quantize_ref can only be compared to +-1)."""
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    assert V % block_v == 0
+    nv = V // block_v
+    budget = jnp.float32((1 << precision) - V)
+    m = jnp.full((B, 1), NEG_INF, jnp.float32)
+    s = jnp.zeros((B, 1), jnp.float32)
+    for j in range(nv):
+        x = logits[:, j * block_v:(j + 1) * block_v]
+        m_new = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+        s = s * jnp.exp(m - m_new) + \
+            jnp.sum(jnp.exp(x - m_new), axis=-1, keepdims=True)
+        m = m_new
+    c = jnp.zeros((B, 1), jnp.float32)
+    prev = jnp.zeros((B, 1), jnp.int32)
+    out = []
+    for j in range(nv):
+        x = logits[:, j * block_v:(j + 1) * block_v]
+        cum = c + jnp.cumsum(jnp.exp(x - m) / s, axis=-1)
+        c = cum[:, -1:]
+        local = jnp.arange(block_v, dtype=jnp.int32)[None, :]
+        idx = j * block_v + local
+        pts = jnp.floor(cum * budget + 0.5).astype(jnp.int32) + idx + 1
+        pts = jnp.minimum(pts, budget.astype(jnp.int32) + idx + 1)
+        pts = jnp.maximum(pts, prev + 1 + local)
+        pts = jnp.where((j == nv - 1) & (local == block_v - 1),
+                        budget.astype(jnp.int32) + jnp.int32(V), pts)
+        prev = pts[:, -1:]
+        out.append(pts)
+    return jnp.concatenate(out, axis=-1)
+
+
+def topk_cdf_ref(logits, k: int, precision: int):
+    """Flat-host oracle for ac_cdf._topk_cdf_kernel (single vocab block):
+    lax.top_k + full-vocab softmax + escape + cumulative-rounding CDF —
+    the same arithmetic as core.cdf.topk_cdf, restated here so the
+    kernel tests stay self-contained."""
+    logits = logits.astype(jnp.float32)
+    top_vals, ids = jax.lax.top_k(logits, k)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    denom = jnp.sum(jnp.exp(logits - m), axis=-1, keepdims=True)
+    top_p = jnp.exp(top_vals - m) / denom
+    esc = jnp.clip(1.0 - jnp.sum(top_p, axis=-1, keepdims=True), 0.0, 1.0)
+    pmf = jnp.concatenate([top_p, esc], axis=-1)
+    pmf = pmf / jnp.sum(pmf, axis=-1, keepdims=True)
+    budget = jnp.float32((1 << precision) - (k + 1))
+    cum = jnp.cumsum(pmf, axis=-1)
+    cum = cum / cum[..., -1:]
+    pts = jnp.floor(cum * budget + 0.5).astype(jnp.int32) \
+        + (1 + jnp.arange(k + 1, dtype=jnp.int32))
+    zero = jnp.zeros_like(pts[..., :1])
+    return ids.astype(jnp.int32), jnp.concatenate([zero, pts], axis=-1)
+
+
+def topk_cdf_blocked_ref(logits, k: int, precision: int, block_v: int):
+    """Blocked oracle for ac_cdf._topk_cdf_kernel with nv > 1: replays
+    the kernel's running (max, sum) accumulation and its scratch-first
+    k-round extract-max top-k merge, so the multi-block kernel must
+    match it bit-identically."""
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    assert V % block_v == 0
+    nv = V // block_v
+    m = jnp.full((B, 1), NEG_INF, jnp.float32)
+    s = jnp.zeros((B, 1), jnp.float32)
+    vals = jnp.full((B, k), NEG_INF, jnp.float32)
+    tids = jnp.zeros((B, k), jnp.int32)
+    for j in range(nv):
+        x = logits[:, j * block_v:(j + 1) * block_v]
+        m_new = jnp.maximum(m, jnp.max(x, axis=-1, keepdims=True))
+        s = s * jnp.exp(m - m_new) + \
+            jnp.sum(jnp.exp(x - m_new), axis=-1, keepdims=True)
+        m = m_new
+        work = jnp.concatenate([vals, x], axis=-1)
+        gid = j * block_v + jnp.arange(block_v, dtype=jnp.int32)[None, :]
+        wid = jnp.concatenate([tids, jnp.broadcast_to(gid, x.shape).astype(
+            jnp.int32)], axis=-1)
+        iota = jnp.broadcast_to(jnp.arange(work.shape[-1], dtype=jnp.int32),
+                                work.shape)
+        n = jnp.int32(work.shape[-1])
+        new_v, new_i = [], []
+        for _ in range(k):
+            mx = jnp.max(work, axis=-1, keepdims=True)
+            pos = jnp.min(jnp.where(work == mx, iota, n), axis=-1,
+                          keepdims=True)
+            sel = iota == pos
+            new_v.append(mx)
+            new_i.append(jnp.sum(jnp.where(sel, wid, 0), axis=-1,
+                                 keepdims=True))
+            work = jnp.where(sel, NEG_INF, work)
+        vals = jnp.concatenate(new_v, axis=-1)
+        tids = jnp.concatenate(new_i, axis=-1)
+    top_p = jnp.exp(vals - m) / s
+    esc = jnp.clip(1.0 - jnp.sum(top_p, axis=-1, keepdims=True), 0.0, 1.0)
+    pmf = jnp.concatenate([top_p, esc], axis=-1)
+    pmf = pmf / jnp.sum(pmf, axis=-1, keepdims=True)
+    budget = jnp.float32((1 << precision) - (k + 1))
+    cum = jnp.cumsum(pmf, axis=-1)
+    cum = cum / cum[:, -1:]
+    pts = jnp.floor(cum * budget + 0.5).astype(jnp.int32) \
+        + (1 + jnp.arange(k + 1, dtype=jnp.int32))
+    zero = jnp.zeros_like(pts[:, :1])
+    return tids, jnp.concatenate([zero, pts], axis=-1)

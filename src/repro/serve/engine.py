@@ -58,6 +58,50 @@ class ModelPredictor:
             return logits[..., :cfg.vocab_size], cache
 
         @jax.jit
+        def _verify(params, cache, seq, extra):
+            """Score T = seq.shape[1] positions in ONE dispatch by scanning
+            the decode-step program, emitting the post-step cache after
+            every input. Because each step IS the lock-step decoder's own
+            jitted computation (same program, same reduction order), the
+            logits are bit-identical to T sequential decode_step calls —
+            the property speculative decompression stands on (DESIGN.md
+            §9). Memory: the stacked snapshots cost (T+1)x the cache — the
+            price of masked per-lane rollback in one gather."""
+            del extra
+
+            def step(c, tok):
+                lg, c2 = model_api.decode_step(params, cfg, c, tok, **fam_kw)
+                return c2, (lg[..., :cfg.vocab_size], c2)
+
+            _, (logits, snaps) = jax.lax.scan(step, cache,
+                                              jnp.swapaxes(seq, 0, 1))
+            # snapshot 0 = the entering cache (0 inputs consumed), so a
+            # rollback index is simply "#inputs this lane keeps"
+            snaps = jax.tree_util.tree_map(
+                lambda s0, st: jnp.concatenate([s0[None], st], axis=0),
+                cache, snaps)
+            return jnp.swapaxes(logits, 0, 1), snaps
+
+        @jax.jit
+        def _rollback(snaps, acc):
+            """Per-lane masked cache restore: lane b resumes from the
+            snapshot taken after it consumed acc[b] of the verify inputs
+            (reset_slots-style — a runtime gather, no recompilation).
+            Cache leaves are (L, B, ...) batch-axis-1 except 'pos' (B,);
+            encdec cross-attn conditioning (xk/xv) is constant across
+            steps, so any snapshot of it is the value itself."""
+            def leaf(path, x):
+                name = path[-1].key if hasattr(path[-1], "key") else ""
+                if name in ("xk", "xv"):
+                    return x[0]
+                ba = 1 if name == "pos" else 2     # batch axis in (T+1, ...)
+                xm = jnp.moveaxis(x, ba, 1)        # (T+1, B, rest...)
+                out = jax.vmap(lambda col, a: col[a],
+                               in_axes=(1, 0))(xm, acc)      # (B, rest...)
+                return jnp.moveaxis(out, 0, ba - 1)
+            return jax.tree_util.tree_map_with_path(leaf, snaps)
+
+        @jax.jit
         def _reset(cache, mask):
             """Zero the cache lanes selected by mask (B,) bool — per-slot
             fresh context for the continuous-batching scheduler. 'pos'
@@ -81,6 +125,8 @@ class ModelPredictor:
 
         self._score = _score
         self._decode = _decode
+        self._verify = _verify
+        self._rollback = _rollback
         self._reset = _reset
 
     # --------------------------------------------------- PredictorAdapter
@@ -110,6 +156,24 @@ class ModelPredictor:
                                      jnp.asarray(prev_tokens, jnp.int32),
                                      self.extra_batch)
         return np.asarray(logits), state
+
+    def verify_steps(self, state, seq: np.ndarray):
+        """Speculative-decode verify program: score seq (B, T) — column 0
+        is each lane's previous token, columns 1..T-1 its drafted
+        continuation — in one jitted dispatch. Returns (logits (B, T, V)
+        bit-identical to T lock-step decode_step calls, snapshots) where
+        ``snapshots`` is the opaque stacked-cache value ``rollback``
+        consumes."""
+        logits, snaps = self._verify(self.params, state,
+                                     jnp.asarray(seq, jnp.int32),
+                                     self.extra_batch)
+        return np.asarray(logits), snaps
+
+    def rollback(self, snapshots, accepted: np.ndarray):
+        """Restore each lane's cache to the state after it consumed
+        ``accepted[b]`` verify inputs (0 = the pre-verify cache) — the
+        speculative decoder's masked per-lane rewind. One jitted gather."""
+        return self._rollback(snapshots, jnp.asarray(accepted, jnp.int32))
 
     def reset_slots(self, state, mask: np.ndarray):
         """Reset the cache lanes selected by ``mask`` (B,) bool to a fresh

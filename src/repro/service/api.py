@@ -67,7 +67,7 @@ class CompressionService:
         tokens = np.asarray(tokens, np.int32).ravel()
         n = int(tokens.size)
         C = self.chunk_size
-        n_chunks = max(1, -(-n // C))
+        n_chunks = -(-n // C)            # 0 tokens => 0 chunks
 
         def assemble(streams: list[bytes]):
             blob = write_container(
@@ -82,6 +82,11 @@ class CompressionService:
 
         job = Job(self._new_job_id(), COMPRESS, priority, n_chunks, n,
                   assemble)
+        if n_chunks == 0:
+            # empty input: a valid zero-chunk container, no scheduler
+            # involvement (there is no chunk completion to wait for)
+            job.resolve(assemble([]))
+            return JobHandle(job, self)
         for i in range(n_chunks):
             lo, hi = i * C, min((i + 1) * C, n)
             self.scheduler.submit(
@@ -111,6 +116,9 @@ class CompressionService:
                   info.n_tokens,
                   lambda chunks: np.concatenate(chunks)[:info.n_tokens]
                   if chunks else np.zeros(0, np.int32))
+        if info.n_chunks == 0:
+            job.resolve(np.zeros(0, np.int32))   # valid empty container
+            return JobHandle(job, self)
         if info.codec == CODEC_AC:
             # legacy codec: grouped lock-step decode, resolved eagerly
             job.resolve(self._legacy_compressor().decompress(blob))

@@ -36,8 +36,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import rans
-from repro.core.cdf import (DEFAULT_PRECISION, logits_to_cdf, pmf_to_cdf,
-                            topk_quantized_jit)
+from repro.core.cdf import DEFAULT_PRECISION, full_cdf_jit, topk_cdf_jit
 from repro.core.compressor import ContainerError
 from .session import COMPRESS, ChunkTask
 
@@ -52,8 +51,12 @@ class SchedulerStats:
 
     @property
     def occupancy(self) -> float:
-        """Fraction of offered lane-steps that coded a real token."""
-        return self.token_steps / max(1, self.lane_steps)
+        """Fraction of offered lane-steps that coded a real token.
+        0.0 when ``run()`` completed without executing a step (e.g. every
+        job rejected at submit) — never a ZeroDivisionError."""
+        if self.lane_steps == 0:
+            return 0.0
+        return self.token_steps / self.lane_steps
 
 
 class SlotScheduler:
@@ -191,9 +194,11 @@ class SlotScheduler:
         cm = m & ~self._is_dec
         truth = self._tok_buf[np.arange(self.B), self._t % self.C]
         if self.topk:
-            ids, qpmf = topk_quantized_jit(logits, self.topk, self.precision)
+            # fused device top-k -> quantized CDF (kernels/ac_cdf.py on
+            # TPU): no host pmf cumsum per step; same integers
+            ids, cdfs = topk_cdf_jit(logits, self.topk, self.precision)
             ids = np.asarray(ids)
-            cdfs = pmf_to_cdf(np.asarray(qpmf))              # (B, K+2)
+            cdfs = np.asarray(cdfs, np.int64)                # (B, K+2)
             syms = np.zeros(self.B, np.int64)
             if dm.any():
                 slots = self._dec.get(cdfs, self.precision, dm)
@@ -217,7 +222,8 @@ class SlotScheduler:
                 if em.any():
                     self._enc.put_uniform(truth, self._esc_bits, em)
         else:
-            cdfs = logits_to_cdf(logits, self.precision)      # (B, V+1)
+            cdfs = np.asarray(full_cdf_jit(logits, self.precision),
+                              np.int64)                       # (B, V+1)
             syms = np.zeros(self.B, np.int64)
             if dm.any():
                 syms = self._dec.get(cdfs, self.precision, dm)

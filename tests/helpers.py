@@ -55,6 +55,15 @@ class GoldenPredictor:
     def decode_step(self, state, prev_tokens):
         return self._table[np.asarray(prev_tokens, np.int32)], state
 
+    # speculative decode hooks: the model is stateless (logits depend on
+    # the previous token only), so verify is a pure table gather and
+    # rollback is the identity
+    def verify_steps(self, state, seq):
+        return self._table[np.asarray(seq, np.int32)], state
+
+    def rollback(self, snapshots, accepted):
+        return snapshots
+
 
 def golden_tokens(n=45, seed=1234, vocab=63):
     """The fixed token stream the golden containers were built from."""

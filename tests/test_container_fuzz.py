@@ -170,8 +170,12 @@ def test_range_decode_requires_v4_and_bounds():
         comp.decompress_range(v3, 0, 1)
     comp4 = _comp(topk=8, container_version=4)
     v4, _ = comp4.compress(golden_tokens(50))
-    with pytest.raises(IndexError):
+    with pytest.raises(ContainerError, match="out of bounds"):
         comp4.decompress_range(v4, 0, 99)
+    with pytest.raises(ContainerError, match="empty"):
+        comp4.decompress_range(v4, 1, 1)
+    with pytest.raises(ContainerError, match="reversed"):
+        comp4.decompress_range(v4, 3, 1)
 
 
 def test_empty_and_garbage_blobs():

@@ -126,6 +126,20 @@ def test_empty_and_tiny_jobs():
                           np.array([5], np.int32))
 
 
+def test_occupancy_zero_without_steps():
+    """SchedulerStats.occupancy on a scheduler that never stepped (or a
+    service whose only jobs resolved at submit) is 0.0 — regression for
+    the ZeroDivisionError when lane_steps == 0."""
+    from repro.service.scheduler import SchedulerStats
+    assert SchedulerStats().occupancy == 0.0
+    svc = _golden_service()
+    assert svc.stats.occupancy == 0.0           # no traffic at all
+    blob, _ = svc.submit_compress(np.zeros(0, np.int32)).result()
+    svc.submit_decompress(blob).result()        # resolved at submit
+    assert svc.stats.model_steps == 0
+    assert svc.stats.occupancy == 0.0
+
+
 def test_legacy_ac_container_decodes_eagerly():
     toks = golden_tokens(60)
     ac_blob, _ = _golden_compressor(codec="ac").compress(toks)

@@ -1,0 +1,267 @@
+"""Bit-exactness of speculative batched decompression (DESIGN.md §9).
+
+The entropy decoder — not the draft — arbitrates every token, so
+speculative decode must produce EXACTLY the lock-step decoder's output on
+every container, for every proposer, including one that is always wrong.
+These tests pin that contract across the registered model families, both
+coded alphabets (top-k + escape, full vocab), adversarial and oracle
+proposers, escape-heavy streams, and the empty-input / invalid-range
+container edges fixed in the same PR.
+"""
+import numpy as np
+import pytest
+
+import jax
+from helpers import GoldenPredictor, tiny
+from repro.core import ContainerError, LLMCompressor
+from repro.core.draft import ConstantDraft, OracleDraft, SuffixDraft
+
+FAMILIES = ["dense", "moe", "ssm", "hybrid"]
+
+
+def _model_pred(family):
+    from repro.models import init_params
+    from repro.serve.engine import ModelPredictor
+    cfg = tiny(family, vocab_size=258)
+    return ModelPredictor(init_params(cfg, jax.random.PRNGKey(0)), cfg,
+                          bos_id=257)
+
+
+def _predictable_tokens(pred, n, q=0.9, seed=11):
+    """Follow the predictor's table argmax with prob q — compressible AND
+    draftable (repeating n-grams), the regime speculation targets."""
+    rng = np.random.default_rng(seed)
+    argmax = pred._table.argmax(axis=-1)
+    toks = np.zeros(n, np.int32)
+    prev = pred.bos_id
+    for i in range(n):
+        t = int(argmax[prev]) if rng.random() < q \
+            else int(rng.integers(0, pred.vocab_size - 1))
+        toks[i] = t
+        prev = t
+    return toks
+
+
+class CountingPredictor(GoldenPredictor):
+    """GoldenPredictor + dispatch counters (decode_step vs verify)."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.n_decode = 0
+        self.n_verify = 0
+
+    def decode_step(self, state, prev_tokens):
+        self.n_decode += 1
+        return super().decode_step(state, prev_tokens)
+
+    def verify_steps(self, state, seq):
+        self.n_verify += 1
+        return super().verify_steps(state, seq)
+
+
+@pytest.mark.parametrize("topk", [8, 0])
+@pytest.mark.parametrize("draft_k", [1, 3, 5])
+def test_spec_equals_lockstep_golden(topk, draft_k):
+    pred = GoldenPredictor()
+    toks = _predictable_tokens(pred, 400)
+    comp = LLMCompressor(pred, chunk_size=32, topk=topk, decode_batch=4)
+    blob, _ = comp.compress(toks)
+    lock = comp.decompress(blob)
+    assert np.array_equal(lock, toks)
+    spec = LLMCompressor(pred, chunk_size=32, topk=topk, decode_batch=4,
+                         draft_k=draft_k)
+    assert np.array_equal(spec.decompress(blob), toks)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_spec_equals_lockstep_model_families(family):
+    pred = _model_pred(family)
+    toks = np.random.default_rng(3).integers(0, 250, 120).astype(np.int32)
+    comp = LLMCompressor(pred, chunk_size=24, topk=16, decode_batch=4)
+    blob, _ = comp.compress(toks)
+    assert np.array_equal(comp.decompress(blob), toks)
+    spec = LLMCompressor(pred, chunk_size=24, topk=16, decode_batch=4,
+                         draft_k=3)
+    assert np.array_equal(spec.decompress(blob), toks)
+
+
+@pytest.mark.parametrize("topk", [8, 0])
+def test_adversarial_always_wrong_draft(topk):
+    """A proposer that never matches costs rounds, never correctness:
+    every round degenerates to one accepted (entropy-decoded) token."""
+    pred = CountingPredictor()
+    toks = _predictable_tokens(pred, 300)
+    comp = LLMCompressor(pred, chunk_size=32, topk=topk, decode_batch=4)
+    blob, _ = comp.compress(toks)
+    bad = LLMCompressor(pred, chunk_size=32, topk=topk, decode_batch=4,
+                        draft_k=4, draft=ConstantDraft(pred.vocab_size - 1))
+    assert np.array_equal(bad.decompress(blob), toks)
+
+
+def test_oracle_draft_accepts_everything():
+    """With a perfect proposer every drafted position is accepted, so the
+    verify-forward count collapses toward n_tokens / (K+1) per lane —
+    the tentpole's speed mechanism, observable deterministically."""
+    pred = CountingPredictor()
+    toks = _predictable_tokens(pred, 512)
+    C, B, K = 32, 4, 4
+    comp = LLMCompressor(pred, chunk_size=C, topk=8, decode_batch=B)
+    blob, _ = comp.compress(toks)
+    pred.n_decode = pred.n_verify = 0
+    comp.decompress(blob)
+    lock_calls = pred.n_decode
+    spec = LLMCompressor(pred, chunk_size=C, topk=8, decode_batch=B,
+                         draft_k=K, draft=OracleDraft(toks, C))
+    pred.n_decode = pred.n_verify = 0
+    assert np.array_equal(spec.decompress(blob), toks)
+    spec_calls = pred.n_decode + pred.n_verify
+    assert lock_calls == C * (toks.size // (C * B))  # C steps per group
+    # all-accept: ceil(C / (K+1)) verify rounds per group, no lock-step
+    assert spec_calls <= -(-C // (K + 1)) * (toks.size // (C * B)) + 1
+    assert spec_calls * 2 < lock_calls
+
+
+def test_suffix_draft_beats_lockstep_dispatches_on_predictable_text():
+    pred = CountingPredictor()
+    toks = _predictable_tokens(pred, 1024, q=0.95)
+    comp = LLMCompressor(pred, chunk_size=64, topk=8, decode_batch=4)
+    blob, _ = comp.compress(toks)
+    pred.n_decode = pred.n_verify = 0
+    comp.decompress(blob)
+    lock_calls = pred.n_decode
+    spec = LLMCompressor(pred, chunk_size=64, topk=8, decode_batch=4,
+                         draft_k=4)
+    pred.n_decode = pred.n_verify = 0
+    assert np.array_equal(spec.decompress(blob), toks)
+    assert pred.n_decode + pred.n_verify < lock_calls
+
+
+def test_escape_heavy_topk_stream():
+    """topk=2 over near-uniform data: most tokens escape, every escape
+    goes through get_uniform inside the speculative accept loop."""
+    pred = GoldenPredictor()
+    rng = np.random.default_rng(5)
+    toks = rng.integers(0, pred.vocab_size - 1, 300).astype(np.int32)
+    comp = LLMCompressor(pred, chunk_size=32, topk=2, decode_batch=4)
+    blob, stats = comp.compress(toks)
+    assert np.array_equal(comp.decompress(blob), toks)
+    spec = LLMCompressor(pred, chunk_size=32, topk=2, decode_batch=4,
+                         draft_k=3)
+    assert np.array_equal(spec.decompress(blob), toks)
+
+
+def test_spec_ragged_tail_and_tiny_inputs():
+    """Lane masks at chunk boundaries: sizes that end mid-chunk,
+    single-token, fewer chunks than lanes."""
+    pred = GoldenPredictor()
+    for n in (1, 7, 31, 33, 65, 97):
+        toks = _predictable_tokens(pred, n, seed=n)
+        comp = LLMCompressor(pred, chunk_size=32, topk=8, decode_batch=4)
+        blob, _ = comp.compress(toks)
+        spec = LLMCompressor(pred, chunk_size=32, topk=8, decode_batch=4,
+                             draft_k=4)
+        assert np.array_equal(spec.decompress(blob), toks), n
+
+
+def test_ac_codec_ignores_draft():
+    """The AC codec has no speculative path; draft_k must be inert, not
+    wrong."""
+    pred = GoldenPredictor()
+    toks = _predictable_tokens(pred, 100)
+    comp = LLMCompressor(pred, chunk_size=32, topk=8, decode_batch=4,
+                         codec="ac")
+    blob, _ = comp.compress(toks)
+    spec = LLMCompressor(pred, chunk_size=32, topk=8, decode_batch=4,
+                         codec="ac", draft_k=4)
+    assert np.array_equal(spec.decompress(blob), toks)
+
+
+# ---------------------------------------------------------------- edges
+
+def test_empty_input_roundtrip():
+    """Zero tokens -> valid zero-chunk container -> empty array, with no
+    model involvement on either side."""
+    class Exploding(GoldenPredictor):
+        def score_chunks(self, tokens):
+            raise AssertionError("model called for empty input")
+
+        def decode_step(self, state, prev):
+            raise AssertionError("model called for empty input")
+
+    pred = Exploding()
+    for kw in (dict(topk=8), dict(topk=0), dict(codec="ac"),
+               dict(topk=8, draft_k=4), dict(container_version=4)):
+        comp = LLMCompressor(pred, chunk_size=32, decode_batch=4, **kw)
+        blob, stats = comp.compress(np.zeros(0, np.int32))
+        assert stats.n_tokens == 0
+        out = comp.decompress(blob)
+        assert out.size == 0 and out.dtype == np.int32
+
+
+def test_empty_input_via_service():
+    from repro.service import CompressionService
+    svc = CompressionService(GoldenPredictor(), slots=4, chunk_size=16,
+                             topk=8)
+    blob, stats = svc.submit_compress(np.zeros(0, np.int32)).result()
+    assert stats.n_tokens == 0
+    out = svc.submit_decompress(blob).result()
+    assert out.size == 0 and out.dtype == np.int32
+
+
+@pytest.mark.parametrize("lo,hi,frag", [
+    (2, 2, "empty"), (3, 1, "reversed"), (-1, 2, "out of bounds"),
+    (0, 99, "out of bounds"),
+])
+def test_decompress_range_invalid_ranges(lo, hi, frag):
+    pred = GoldenPredictor()
+    toks = _predictable_tokens(pred, 150)
+    comp = LLMCompressor(pred, chunk_size=32, topk=8, decode_batch=4,
+                         container_version=4)
+    blob, _ = comp.compress(toks)
+    with pytest.raises(ContainerError, match=frag):
+        comp.decompress_range(blob, lo, hi)
+
+
+def test_decompress_range_empty_container():
+    comp = LLMCompressor(GoldenPredictor(), chunk_size=32, topk=8,
+                         decode_batch=4, container_version=4)
+    blob, _ = comp.compress(np.zeros(0, np.int32))
+    with pytest.raises(ContainerError, match="out of bounds"):
+        comp.decompress_range(blob, 0, 1)
+
+
+# ------------------------------------------------------------------ CLI
+
+def test_cli_empty_file_roundtrip(tmp_path, monkeypatch):
+    import repro.cli as cli
+    monkeypatch.setattr(cli, "_predictor",
+                        lambda name: GoldenPredictor(vocab_size=258))
+    src = tmp_path / "empty.bin"
+    src.write_bytes(b"")
+    arc = tmp_path / "empty.llmc"
+    out = tmp_path / "out.bin"
+    assert cli.main(["compress", str(src), str(arc), "--chunk", "16"]) == 0
+    assert cli.main(["info", str(arc)]) == 0
+    assert cli.main(["decompress", str(arc), str(out)]) == 0
+    assert out.read_bytes() == b""
+
+
+def test_cli_range_errors_are_clean(tmp_path, monkeypatch):
+    import repro.cli as cli
+    monkeypatch.setattr(cli, "_predictor",
+                        lambda name: GoldenPredictor(vocab_size=258))
+    src = tmp_path / "data.bin"
+    src.write_bytes(bytes(range(100)))
+    arc = tmp_path / "data.llmc"
+    out = tmp_path / "out.bin"
+    assert cli.main(["compress", str(src), str(arc), "--chunk", "16",
+                     "--topk", "8"]) == 0
+    with pytest.raises(SystemExit, match="llmc: invalid chunk range"):
+        cli.main(["range", str(arc), str(out), "--chunks", "2:2"])
+    with pytest.raises(SystemExit, match="llmc: chunk range .* out of"):
+        cli.main(["range", str(arc), str(out), "--chunks", "0:99"])
+    with pytest.raises(SystemExit, match="LO:HI"):
+        cli.main(["range", str(arc), str(out), "--chunks", "nope"])
+    # a valid range still decodes
+    assert cli.main(["range", str(arc), str(out), "--chunks", "1:3"]) == 0
+    assert out.read_bytes() == bytes(range(16, 48))
