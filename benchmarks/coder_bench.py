@@ -127,6 +127,11 @@ def main() -> int:
     print("\n# CSV (name,us_per_call,derived)")
     for row in csv_rows:
         print(row)
+    from repro import obs
+    reg = obs.registry()
+    print(f"# registry: rans.streams_flushed="
+          f"{reg.value('rans.streams_flushed')} rans.stream_bytes="
+          f"{reg.value('rans.stream_bytes')}")
     if args.smoke:
         return 0
     if speedup_64 < 5.0:

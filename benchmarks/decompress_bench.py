@@ -168,6 +168,14 @@ def main() -> int:
           f"wall_speedup={res['wall_speedup']:.2f};"
           f"dispatch_ratio={res['dispatch_ratio']:.2f};"
           f"tok_per_s={res['spec_tok_per_s']:.0f}")
+    from repro import obs
+    reg = obs.registry()     # spec path records into the global registry
+    offered = reg.value("spec.drafted_tokens")
+    acc = reg.value("spec.drafted_accepted")
+    if offered:
+        print(f"# registry: spec.rounds={reg.value('spec.rounds')} "
+              f"spec.rollbacks={reg.value('spec.rollbacks')} "
+              f"draft_acceptance={acc / offered:.3f}")
     ok = True
     if res["dispatch_ratio"] < DISPATCH_FLOOR:
         print(f"FAIL: dispatch ratio {res['dispatch_ratio']:.2f}x < "

@@ -12,6 +12,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import sys
 import time
 
 import numpy as np
@@ -343,27 +344,65 @@ def decompress_throughput(quick=False):
     return res
 
 
+def telemetry_overhead(quick=False):
+    """DESIGN.md §10 gate: running the service decode bench with the
+    metrics registry enabled must cost < 2% wall time over disabled
+    (telemetry is always byte-inert; this bounds its *time* cost too).
+    benchmarks/run.py exits non-zero when this gate fails."""
+    from benchmarks.service_bench import run_overhead
+    t0 = time.time()
+    if quick:
+        res = run_overhead(n_jobs=12, slots=4, chunk=16, repeats=3)
+    else:
+        res = run_overhead()
+    _csv("telemetry_overhead", (time.time() - t0) * 1e6,
+         f"overhead_pct={res['overhead'] * 100:.2f};"
+         f"pass={res['gate_pass']}")
+    (RESULTS / "telemetry_overhead.json").write_text(
+        json.dumps(res, indent=1))
+    return res
+
+
 ALL = [table2_information, table3_traditional, table5_main, fig_chunk_size,
        fig_model_size, fig_data_scale, fig9_human_vs_llm, fig8_domain_models,
-       coder_throughput, service_throughput, decompress_throughput]
+       coder_throughput, service_throughput, decompress_throughput,
+       telemetry_overhead]
 
 
 def main() -> None:
+    from repro import obs
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     RESULTS.mkdir(parents=True, exist_ok=True)
     t0 = time.time()
+    gate_failures = []
     for fn in ALL:
         if args.only and args.only not in fn.__name__:
             continue
-        fn(quick=args.quick)
+        # each bench runs against a fresh process-global registry, whose
+        # full snapshot (compressor/rans/draft counters, span timings)
+        # lands in results/ next to the bench's own result table
+        reg = obs.MetricsRegistry(name=fn.__name__)
+        prev = obs.set_registry(reg)
+        try:
+            out = fn(quick=args.quick)
+        finally:
+            obs.set_registry(prev)
+        (RESULTS / f"BENCH_{fn.__name__}.metrics.json").write_text(
+            reg.to_json())
+        if isinstance(out, dict) and out.get("gate_pass") is False:
+            gate_failures.append(fn.__name__)
     print(f"\n# total {time.time()-t0:.0f}s")
     print("\n# CSV (name,us_per_call,derived)")
     for row in CSV_ROWS:
         print(row)
     (RESULTS / "bench_csv.txt").write_text("\n".join(CSV_ROWS))
+    if gate_failures:
+        print(f"FAIL: benchmark gate(s): {', '.join(gate_failures)}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,8 @@ import numpy as np
 sys.path[:0] = ["src", "."]
 
 SPEEDUP_FLOOR = 1.5
+OVERHEAD_LIMIT = 0.02          # telemetry-enabled slowdown budget (§10)
+OVERHEAD_ABS_SLACK_S = 0.010   # absolute per-leg jitter allowance
 
 
 class TablePredictor:
@@ -165,10 +167,65 @@ def run_mixed(slots=8, chunk=32, topk=8, seed=1, log=print):
             "mixed_occupancy": svc.stats.occupancy}
 
 
+def run_overhead(n_jobs=24, slots=8, chunk=32, topk=8, repeats=5, seed=0,
+                 log=print):
+    """Telemetry-overhead gate (DESIGN.md §10): the same ragged decode
+    workload through two services — registry enabled vs disabled —
+    interleaved, min-of-repeats (min is the noise-robust estimator for a
+    deterministic workload). Decoded tokens are compared against the
+    originals every repeat on both legs: telemetry must never change
+    output bytes. Budget: enabled <= disabled * (1 + 2%) + 10ms absolute
+    slack; override with $REPRO_TELEMETRY_OVERHEAD_MAX."""
+    import os
+
+    from repro.core import LLMCompressor
+    from repro.service import CompressionService
+
+    rng = np.random.default_rng(seed)
+    datas = ragged_workload(rng, n_jobs, slots, chunk)
+    pred = TablePredictor()
+    comp = LLMCompressor(pred, chunk_size=chunk, topk=topk,
+                         decode_batch=slots, container_version=4)
+    blobs = [comp.compress(d)[0] for d in datas]
+
+    def leg(enabled):
+        svc = CompressionService(pred, slots=slots, chunk_size=chunk,
+                                 topk=topk)
+        svc.registry.enabled = enabled
+        t0 = time.perf_counter()
+        handles = [svc.submit_decompress(b) for b in blobs]
+        outs = [h.result() for h in handles]
+        dt = time.perf_counter() - t0
+        for o, d in zip(outs, datas):
+            assert np.array_equal(o, d), \
+                f"LOSSLESS VIOLATION (telemetry enabled={enabled})"
+        return dt
+
+    best = {True: float("inf"), False: float("inf")}
+    leg(True)                       # warm both paths outside the clocks
+    leg(False)
+    for _ in range(repeats):
+        for enabled in (False, True):    # interleaved: drift-fair
+            best[enabled] = min(best[enabled], leg(enabled))
+    limit = float(os.environ.get("REPRO_TELEMETRY_OVERHEAD_MAX",
+                                 OVERHEAD_LIMIT))
+    overhead = best[True] / max(1e-9, best[False]) - 1.0
+    ok = best[True] <= best[False] * (1.0 + limit) + OVERHEAD_ABS_SLACK_S
+    log(f"telemetry overhead: enabled {best[True] * 1e3:.1f}ms vs "
+        f"disabled {best[False] * 1e3:.1f}ms -> {overhead * 100:+.2f}% "
+        f"(budget {limit * 100:.0f}%) {'PASS' if ok else 'FAIL'}")
+    return {"enabled_s": best[True], "disabled_s": best[False],
+            "overhead": overhead, "limit": limit, "repeats": repeats,
+            "n_jobs": n_jobs, "slots": slots, "chunk": chunk,
+            "gate_pass": ok}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small workload for the CI fast job")
+    ap.add_argument("--overhead", action="store_true",
+                    help="also run the telemetry-overhead gate")
     args = ap.parse_args()
     if args.smoke:
         res = run_bench(n_jobs=16, slots=4, chunk=16)
@@ -187,6 +244,15 @@ def main() -> int:
     print(f"PASS: jobs/sec speedup {res['wall_speedup']:.2f}x >= "
           f"{SPEEDUP_FLOOR}x (model steps: {res['step_speedup']:.2f}x, "
           f"occupancy {res['occupancy']:.2f})")
+    if args.overhead:
+        if args.smoke:
+            ores = run_overhead(n_jobs=12, slots=4, chunk=16, repeats=3)
+        else:
+            ores = run_overhead()
+        if not ores["gate_pass"]:
+            print(f"FAIL: telemetry overhead {ores['overhead'] * 100:.2f}% "
+                  f"> {ores['limit'] * 100:.0f}% budget", file=sys.stderr)
+            return 1
     return 0
 
 

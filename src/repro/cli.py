@@ -2,14 +2,25 @@
 
     llmc compress   IN OUT [--codec rans|ac] [--chunk N] [--topk K]
                            [--slots B] [--predictor NAME] [--v3]
-    llmc decompress IN OUT [--predictor NAME]
+                           [--sidecar]
+    llmc decompress IN OUT [--predictor NAME] [--sidecar]
     llmc range      IN OUT --chunks LO:HI [--predictor NAME]
     llmc info       IN
+    llmc stats      [--tokens N] [--format json|prom|text]
+                    [--predictor NAME]
 
 ``compress``/``decompress`` route through the continuous-batching
 service (repro.service) and write/read v4 seekable containers by
 default; ``range`` random-access-decodes a chunk interval from a v4
 archive; ``info`` prints header + index without loading any model.
+
+``stats`` (DESIGN.md §10) runs a small round-trip workload through a
+``CompressionService`` and prints its telemetry snapshot — occupancy,
+bits/token histogram, escape counts, job counters — as JSON (default),
+Prometheus text exposition (``--format prom``), or a human summary
+(``--format text``). ``--sidecar`` on compress/decompress writes the
+job's per-chunk diagnostics next to the container as
+``<container>.diag.json``.
 
 Predictors come from the benchmark prep cache (trained byte-level LMs,
 benchmarks/prep.py), so the model-dependent commands must run from a
@@ -73,6 +84,7 @@ def _cmd_compress(args) -> int:
     data = open(args.input, "rb").read()
     toks = encode(data)
     t0 = time.time()
+    handle = None
     if args.codec == "ac" or args.v3:
         # legacy codec / wire-minimal container: grouped path
         comp = LLMCompressor(pred, chunk_size=args.chunk, topk=args.topk,
@@ -80,8 +92,18 @@ def _cmd_compress(args) -> int:
                              container_version=3 if args.v3 else 4)
         blob, stats = comp.compress(toks)
     else:
-        blob, stats = _service(args, pred).submit_compress(toks).result()
+        handle = _service(args, pred).submit_compress(toks)
+        blob, stats = handle.result()
     open(args.output, "wb").write(blob)
+    if args.sidecar:
+        from repro import obs
+        if handle is not None:
+            path = handle.write_sidecar(args.output)
+        else:   # grouped path: per-chunk diagnostics ride on stats.chunks
+            path = obs.write_sidecar(args.output, obs.JobDiagnostics(
+                kind="compress", codec=args.codec, n_tokens=stats.n_tokens,
+                container_bytes=len(blob), chunks=stats.chunks))
+        print(f"diagnostics -> {path}")
     print(f"{len(data)}B -> {len(blob)}B "
           f"({len(data) / max(1, len(blob)):.2f}x, "
           f"{stats.n_tokens} tokens, {time.time() - t0:.1f}s)")
@@ -101,6 +123,7 @@ def _cmd_decompress(args) -> int:
     args.precision = info.precision
     args.slots = args.slots or info.encode_batch or 16
     t0 = time.time()
+    handle = None
     if info.codec_name == "ac":
         # legacy codec: the service is rANS-only (and its rANS precision
         # cap would reject legal high-precision AC archives) — grouped
@@ -117,7 +140,14 @@ def _cmd_decompress(args) -> int:
                              decode_batch=args.slots, draft_k=args.draft)
         toks = comp.decompress(blob)
     else:
-        toks = _service(args, pred).submit_decompress(blob).result()
+        handle = _service(args, pred).submit_decompress(blob)
+        toks = handle.result()
+    if args.sidecar:
+        if handle is not None:
+            print(f"diagnostics -> {handle.write_sidecar(args.input)}")
+        else:
+            print("llmc: note: --sidecar needs the service decode path "
+                  "(rans codec, no --draft); skipped", file=sys.stderr)
     open(args.output, "wb").write(decode(toks))
     print(f"{len(blob)}B -> decoded {toks.size} tokens "
           f"({time.time() - t0:.1f}s)")
@@ -155,6 +185,47 @@ def _cmd_range(args) -> int:
     return 0
 
 
+def _cmd_stats(args) -> int:
+    """Exercise a CompressionService on a small round-trip workload and
+    print its telemetry snapshot (DESIGN.md §10)."""
+    import numpy as np
+    pred = _predictor(args.predictor)
+    args.chunk = args.chunk or 64
+    args.topk = args.topk or 0
+    args.slots = args.slots or 8
+    svc = _service(args, pred)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, max(2, pred.vocab_size - 1), args.tokens,
+                        dtype=np.int32)
+    blob, _ = svc.submit_compress(toks).result()
+    rt = svc.submit_decompress(blob).result()
+    if not np.array_equal(rt, toks):
+        raise SystemExit("llmc: stats round-trip mismatch (BUG)")
+    snap = svc.snapshot()
+    if args.format == "prom":
+        sys.stdout.write(svc.registry.to_prometheus())
+    elif args.format == "text":
+        sched = snap["scheduler"]
+        bpt = snap["chunk_bits_per_token"] or {}
+        print(f"workload: {args.tokens} tokens round-tripped "
+              f"({len(blob)} container bytes)")
+        print(f"occupancy {snap['occupancy']:.3f}  model_steps "
+              f"{sched['model_steps']}  chunks {sched['chunks_completed']}"
+              f"  refills {sched['refills']}  failures "
+              f"{sched['chunk_failures']}")
+        if bpt:
+            print(f"bits/token: mean {bpt['mean']:.2f}  p50 {bpt['p50']:g}"
+                  f"  p99 {bpt['p99']:g}  ({bpt['count']} chunks)")
+        acc = snap["draft_acceptance"]
+        print(f"draft acceptance: "
+              f"{'n/a (no speculative decode)' if acc is None else acc}")
+        print(f"jobs: {snap['jobs']}")
+    else:
+        import json
+        print(json.dumps(snap, indent=1, default=str))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="llmc", description="LLM next-token-prediction compressor")
@@ -179,6 +250,9 @@ def main(argv=None) -> int:
     p.add_argument("--v3", action="store_true",
                    help="write the wire-minimal v3 container "
                         "(no index/checksums)")
+    p.add_argument("--sidecar", action="store_true",
+                   help="write per-chunk diagnostics (bits/token, "
+                        "escapes) to OUT.diag.json")
     p.set_defaults(fn=_cmd_compress)
 
     p = sub.add_parser("decompress", help=".llmc container -> file")
@@ -186,6 +260,8 @@ def main(argv=None) -> int:
     p.add_argument("--draft", type=int, default=0, metavar="K",
                    help="speculative decode: self-draft K tokens per "
                         "verify forward (0 = lock-step)")
+    p.add_argument("--sidecar", action="store_true",
+                   help="write per-chunk diagnostics to IN.diag.json")
     p.set_defaults(fn=_cmd_decompress)
 
     p = sub.add_parser("range", help="random-access decode (v4 only)")
@@ -196,6 +272,20 @@ def main(argv=None) -> int:
     p = sub.add_parser("info", help="print header + index (no model)")
     common(p, model=False)
     p.set_defaults(fn=_cmd_info)
+
+    p = sub.add_parser(
+        "stats", help="run a sample workload, print service telemetry")
+    p.add_argument("--predictor", default="pred-base")
+    p.add_argument("--tokens", type=int, default=2048,
+                   help="workload size in tokens (default 2048)")
+    p.add_argument("--chunk", type=int, default=64)
+    p.add_argument("--topk", type=int, default=0)
+    p.add_argument("--slots", type=int, default=8)
+    p.add_argument("--format", choices=("json", "prom", "text"),
+                   default="json",
+                   help="snapshot format: structured JSON (default), "
+                        "Prometheus text exposition, or human summary")
+    p.set_defaults(fn=_cmd_stats)
 
     args = ap.parse_args(argv)
     return args.fn(args)

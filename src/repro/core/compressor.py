@@ -77,6 +77,7 @@ from typing import Callable, Protocol
 
 import numpy as np
 
+from repro import obs
 from . import ac, rans
 from .cdf import (DEFAULT_PRECISION, build_topk_cdfs, full_cdf_jit,
                   full_cdf_lookup_jit, logits_to_cdf, pmf_to_cdf,
@@ -400,6 +401,11 @@ class CompressionStats:
     header_bytes: int = 0
     n_escapes: int = 0
     ideal_bits: float = 0.0  # -sum log2 p from the un-quantized model
+    # per-chunk obs.ChunkDiagnostics (DESIGN.md §10) — populated when the
+    # compressor's registry is enabled; empty otherwise. This is the
+    # signal the ROADMAP's adaptive codec router consumes: bits/token and
+    # escape rate per chunk, previously computed and thrown away.
+    chunks: list = field(default_factory=list)
 
     @property
     def total_bytes(self) -> int:
@@ -417,7 +423,8 @@ class LLMCompressor:
                  codec: str = "rans",
                  container_version: int = VERSION_V3,
                  draft_k: int = 0,
-                 draft=None):
+                 draft=None,
+                 registry: obs.MetricsRegistry | None = None):
         if topk and topk >= predictor.vocab_size:
             topk = 0
         if codec not in CODEC_IDS:
@@ -457,6 +464,18 @@ class LLMCompressor:
         # forward for a 1-token/round yield indefinitely)
         self._spec_window = 8
         self._spec_floor = 0.75
+        # telemetry (DESIGN.md §10): defaults to the process-global
+        # registry; inject a private MetricsRegistry to isolate. Strictly
+        # read-only with respect to output bytes (property-tested).
+        self._registry = registry if registry is not None else obs.registry()
+        self._c_cmp_tokens = self._registry.counter(
+            "compress.tokens", "tokens entropy-coded (compress side)")
+        self._c_cmp_escapes = self._registry.counter(
+            "compress.escapes", "escape symbols emitted while encoding")
+        self._c_dec_tokens = self._registry.counter(
+            "decompress.tokens", "tokens entropy-decoded")
+        self._c_dec_escapes = self._registry.counter(
+            "decompress.escapes", "escape symbols hit while decoding")
 
     # ------------------------------------------------------------- compress
     def compress(self, tokens: np.ndarray, *,
@@ -488,18 +507,23 @@ class LLMCompressor:
         # shrinking the program — and the count recorded in the v4 footer
         # is therefore exactly what every chunk was encoded at.
         B = min(self.decode_batch, n_chunks)
-        for i in range(0, n_chunks, max(1, B)):
-            batch = chunks[i:i + B]
-            nb = batch.shape[0]
-            if nb < B:
-                batch = np.concatenate(
-                    [batch, np.zeros((B - nb, C), np.int32)])
-            if exact:
-                logits = self._score_incremental(batch)
-            else:
-                logits = np.asarray(self.predictor.score_chunks(batch))
-            streams.extend(self._encode_batch(batch[:nb], logits[:nb],
-                                              i, n, stats))
+        with obs.span("compress.job", self._registry):
+            for i in range(0, n_chunks, max(1, B)):
+                batch = chunks[i:i + B]
+                nb = batch.shape[0]
+                if nb < B:
+                    batch = np.concatenate(
+                        [batch, np.zeros((B - nb, C), np.int32)])
+                if exact:
+                    with obs.span("compress.score", self._registry):
+                        logits = self._score_incremental(batch)
+                else:
+                    logits = np.asarray(self.predictor.score_chunks(batch))
+                streams.extend(self._encode_batch(batch[:nb], logits[:nb],
+                                                  i, n, stats))
+        self._c_cmp_tokens.inc(n)
+        self._c_cmp_escapes.inc(stats.n_escapes)
+        self._registry.counter("compress.chunks").inc(n_chunks)
         blob = write_container(
             streams, version=self.container_version, chunk_size=C,
             n_tokens=n, vocab=self.predictor.vocab_size, topk=self.topk,
@@ -531,16 +555,36 @@ class LLMCompressor:
         return lens[chunk_offset:chunk_offset + B]
 
     def _encode_batch(self, batch, logits, chunk_offset, n_total, stats):
-        self._accumulate_ideal_bits(batch, logits, chunk_offset, n_total,
-                                    stats)
+        ideal_rows = self._accumulate_ideal_bits(batch, logits,
+                                                 chunk_offset, n_total,
+                                                 stats)
         if self.codec == "rans":
-            return self._encode_batch_rans(batch, logits, chunk_offset,
-                                           n_total, stats)
-        return self._encode_batch_ac(batch, logits, chunk_offset,
-                                     n_total, stats)
+            streams, bits_rows, esc_rows = self._encode_batch_rans(
+                batch, logits, chunk_offset, n_total, stats)
+        else:
+            streams, bits_rows, esc_rows = self._encode_batch_ac(
+                batch, logits, chunk_offset, n_total, stats)
+        if self._registry.enabled:
+            valid = self._valid_lengths(batch.shape[0], chunk_offset,
+                                        n_total)
+            h = self._registry.histogram(
+                "chunk.bits_per_token",
+                "realized payload bits/token per chunk")
+            for b, s in enumerate(streams):
+                d = obs.ChunkDiagnostics(
+                    chunk_index=chunk_offset + b, n_tokens=int(valid[b]),
+                    stream_bytes=len(s),
+                    coded_bits=float(bits_rows[b]),
+                    ideal_bits=float(ideal_rows[b]),
+                    n_escapes=int(esc_rows[b]))
+                stats.chunks.append(d)
+                h.observe(d.bits_per_token)
+        return streams
 
     def _accumulate_ideal_bits(self, batch, logits, chunk_offset, n_total,
                                stats):
+        """Accumulate the un-quantized model cross-entropy into ``stats``;
+        returns the per-chunk row sums (bits) for diagnostics."""
         lp = logits.astype(np.float64)
         lp -= lp.max(axis=-1, keepdims=True)
         lse = np.log(np.exp(lp).sum(axis=-1))
@@ -548,7 +592,9 @@ class LLMCompressor:
                                     axis=-1)[..., 0]
         valid = self._valid_lengths(batch.shape[0], chunk_offset, n_total)
         m = np.arange(batch.shape[1])[None, :] < valid[:, None]
-        stats.ideal_bits += float(((lse - tok_lp) * m).sum() / np.log(2.0))
+        rows = ((lse - tok_lp) * m).sum(axis=1) / np.log(2.0)
+        stats.ideal_bits += float(rows.sum())
+        return rows
 
     def _encode_batch_rans(self, batch, logits, chunk_offset, n_total,
                            stats):
@@ -559,6 +605,9 @@ class LLMCompressor:
         valid = self._valid_lengths(B, chunk_offset, n_total)
         enc = rans.BatchedRansEncoder(B)
         pos = np.arange(C)[None, :] < valid[:, None]          # (B, C) active
+        tel = self._registry.enabled
+        bits_rows = np.zeros(B, np.float64)
+        esc_rows = np.zeros(B, np.int64)
         if self.topk:
             ids, qpmf = topk_quantized_jit(logits, self.topk, self.precision)
             ids, cdfs = build_topk_cdfs(ids, qpmf)            # (B,C,K),(B,C,K+2)
@@ -569,7 +618,12 @@ class LLMCompressor:
                                         axis=-1)[..., 0]
             ends = np.take_along_axis(cdfs, slots[..., None] + 1,
                                       axis=-1)[..., 0]
-            stats.n_escapes += int((~has & pos).sum())
+            esc_rows = (~has & pos).sum(axis=1)
+            stats.n_escapes += int(esc_rows.sum())
+            if tel:   # quantized code length per chunk (diagnostics only)
+                fr = np.maximum((ends - starts).astype(np.float64), 1.0)
+                bits_rows = ((self.precision - np.log2(fr)) * pos) \
+                    .sum(axis=1) + esc_rows * self._esc_bits
             for t in range(C):
                 m = pos[:, t]
                 if not m.any():
@@ -583,6 +637,8 @@ class LLMCompressor:
             # per-position CDFs: a (B, C, V+1) int64 tensor would be tens
             # of GB at production vocab sizes, so quantize one (B, V+1)
             # slab per step — same shape the decode path uses
+            lanes = np.arange(B)
+            syms_all = batch.astype(np.int64)
             for t in range(C):
                 m = pos[:, t]
                 if not m.any():
@@ -590,7 +646,13 @@ class LLMCompressor:
                 cdfs = logits_to_cdf(logits[:, t], self.precision)
                 enc.put_symbols(batch[:, t].astype(np.int64), cdfs,
                                 self.precision, m)
-        return enc.finish()
+                if tel:
+                    sy = syms_all[:, t]
+                    fr = np.maximum(
+                        (cdfs[lanes, sy + 1] - cdfs[lanes, sy])
+                        .astype(np.float64), 1.0)
+                    bits_rows += (self.precision - np.log2(fr)) * m
+        return enc.finish(), bits_rows, esc_rows
 
     def _encode_batch_ac(self, batch, logits, chunk_offset, n_total, stats):
         """Legacy per-stream arithmetic-coding loops (reference codec)."""
@@ -600,6 +662,7 @@ class LLMCompressor:
             ids, qpmf = topk_quantized_jit(logits, self.topk, self.precision)
             ids, cdfs = build_topk_cdfs(ids, qpmf)
         valid = self._valid_lengths(batch.shape[0], chunk_offset, n_total)
+        esc_rows = np.zeros(batch.shape[0], np.int64)
         for b in range(batch.shape[0]):
             enc = ac.ArithmeticEncoder()
             for t in range(int(valid[b])):
@@ -610,13 +673,16 @@ class LLMCompressor:
                         enc.encode(int(slot[0]), cdfs[b, t])
                     else:  # escape, then uniform over the full vocab
                         stats.n_escapes += 1
+                        esc_rows[b] += 1
                         enc.encode(self.topk, cdfs[b, t])
                         enc.encode(sym, ac.uniform_cdf(V))
                 else:
                     cdf = logits_to_cdf(logits[b, t], self.precision)
                     enc.encode(sym, cdf)
             streams.append(enc.finish() if valid[b] else b"")
-        return streams
+        # the AC path is the legacy reference: stream bytes supply
+        # bits/token in diagnostics, quantized code length is not accrued
+        return streams, np.zeros(batch.shape[0], np.float64), esc_rows
 
     # ----------------------------------------------------------- decompress
     def _check_config(self, info: ContainerInfo) -> None:
@@ -636,16 +702,19 @@ class LLMCompressor:
         # nothing, so decode_batch must match the encoder's — mirror its
         # min() and dead-lane padding either way
         B = info.encode_batch or min(self.decode_batch, info.n_chunks)
-        for i in range(0, info.n_chunks, B):
-            group = streams[i:i + B]
-            ng = len(group)
-            v = valid[i:i + B]
-            if ng < B:
-                group = group + [b""] * (B - ng)
-                v = np.concatenate([v, np.zeros(B - ng, np.int64)])
-            dec_tokens = self._decode_group(group, v, info.codec,
-                                            chunk_offset=i)
-            out[i * C:(i + ng) * C] = dec_tokens[:ng].ravel()
+        with obs.span("decompress.job", self._registry):
+            for i in range(0, info.n_chunks, B):
+                group = streams[i:i + B]
+                ng = len(group)
+                v = valid[i:i + B]
+                if ng < B:
+                    group = group + [b""] * (B - ng)
+                    v = np.concatenate([v, np.zeros(B - ng, np.int64)])
+                dec_tokens = self._decode_group(group, v, info.codec,
+                                                chunk_offset=i)
+                out[i * C:(i + ng) * C] = dec_tokens[:ng].ravel()
+        self._c_dec_tokens.inc(info.n_tokens)
+        self._registry.counter("decompress.chunks").inc(info.n_chunks)
         return out[:info.n_tokens]
 
     def decompress_range(self, blob: bytes, chunk_start: int,
@@ -708,12 +777,14 @@ class LLMCompressor:
     # the continuous-batching scheduler's drain path.
     def _decode_group(self, streams, valid: np.ndarray, codec: int,
                       chunk_offset: int = 0):
-        if codec == CODEC_RANS:
-            if self.draft_k > 0 and hasattr(self.predictor, "verify_steps"):
-                return self._decode_group_rans_spec(streams, valid,
-                                                    chunk_offset)
-            return self._decode_group_rans(streams, valid)
-        return self._decode_group_ac(streams, valid)
+        with obs.span("decode.group", self._registry):
+            if codec == CODEC_RANS:
+                if self.draft_k > 0 and hasattr(self.predictor,
+                                                "verify_steps"):
+                    return self._decode_group_rans_spec(streams, valid,
+                                                        chunk_offset)
+                return self._decode_group_rans(streams, valid)
+            return self._decode_group_ac(streams, valid)
 
     def _begin_group(self, B, C):
         if hasattr(self.predictor, "set_decode_len"):
@@ -744,6 +815,7 @@ class LLMCompressor:
             if esc.any():
                 u = dec.get_uniform(self._esc_bits, esc)
                 syms = np.where(esc, u, syms)
+                self._c_dec_escapes.inc(int(esc.sum()))
         else:
             syms, starts, freqs = (np.asarray(a) for a in full_cdf_lookup_jit(
                 logits, slots_bits.astype(np.int32), self.precision))
@@ -785,6 +857,7 @@ class LLMCompressor:
             if esc.any():
                 u = dec.get_uniform(self._esc_bits, esc)
                 syms = np.where(esc, u, syms)
+                self._c_dec_escapes.inc(int(esc.sum()))
         return np.where(m, syms, 0)
 
     def _decode_group_rans(self, streams, valid):
@@ -828,7 +901,11 @@ class LLMCompressor:
         pos = np.zeros(B, np.int64)
         if hasattr(self.draft, "begin_group"):
             self.draft.begin_group(chunk_offset)
-        rounds = drafted_hits = 0
+        rounds = drafted_hits = offered = rollbacks = 0
+        tel = self._registry.enabled
+        depth_h = self._registry.histogram(
+            "spec.accept_depth",
+            "tokens decoded per lane per speculative round") if tel else None
         lanes = np.arange(B)
         while True:
             active = pos < valid
@@ -836,36 +913,57 @@ class LLMCompressor:
                 break
             if rounds >= self._spec_window and \
                     drafted_hits < self._spec_floor * rounds:
+                self._registry.counter(
+                    "spec.lockstep_fallthroughs",
+                    "groups that abandoned drafting mid-decode").inc()
                 self._lockstep_tail(dec, state, prev, pos, valid, tokens)
                 break
-            drafts = np.clip(
-                self.draft.propose(tokens, pos, K), 0,
-                self.predictor.vocab_size - 1).astype(np.int32)
-            seq = np.concatenate([prev[:, None], drafts], axis=1)
-            logits, snaps = self.predictor.verify_steps(state, seq)
-            ids_a, cdf_a = self._round_cdfs(np.asarray(logits))
-            acc = np.zeros(B, np.int64)
-            chain = active.copy()
-            for j in range(K + 1):
-                mj = chain & (pos + j < valid)
-                if not mj.any():
-                    break
-                syms = self._coder_decode_host(
-                    dec, None if ids_a is None else ids_a[:, j],
-                    cdf_a[:, j], mj)
-                tokens[mj, (pos + j)[mj]] = syms[mj]
-                acc[mj] += 1
-                chain = mj & (syms == drafts[:, j]) if j < K else \
-                    np.zeros(B, bool)
-            # lane b resumed from the snapshot after acc[b] verify inputs:
-            # [prev, d_0..d_{acc-2}] — the acc'th accepted token is NOT
-            # fed back here; it is the next round's `prev`
-            state = self.predictor.rollback(snaps, acc.astype(np.int32))
-            pos += acc
-            prev = np.where(acc > 0, tokens[lanes, np.maximum(pos - 1, 0)],
-                            prev).astype(np.int32)
-            rounds += 1
-            drafted_hits += int(np.maximum(acc - 1, 0).sum())
+            with obs.span("decode.verify_round", self._registry):
+                drafts = np.clip(
+                    self.draft.propose(tokens, pos, K), 0,
+                    self.predictor.vocab_size - 1).astype(np.int32)
+                seq = np.concatenate([prev[:, None], drafts], axis=1)
+                logits, snaps = self.predictor.verify_steps(state, seq)
+                ids_a, cdf_a = self._round_cdfs(np.asarray(logits))
+                acc = np.zeros(B, np.int64)
+                chain = active.copy()
+                for j in range(K + 1):
+                    mj = chain & (pos + j < valid)
+                    if not mj.any():
+                        break
+                    syms = self._coder_decode_host(
+                        dec, None if ids_a is None else ids_a[:, j],
+                        cdf_a[:, j], mj)
+                    tokens[mj, (pos + j)[mj]] = syms[mj]
+                    acc[mj] += 1
+                    chain = mj & (syms == drafts[:, j]) if j < K else \
+                        np.zeros(B, bool)
+                # lane b resumed from the snapshot after acc[b] verify
+                # inputs: [prev, d_0..d_{acc-2}] — the acc'th accepted
+                # token is NOT fed back here; it is the next round's `prev`
+                state = self.predictor.rollback(snaps, acc.astype(np.int32))
+                pos += acc
+                prev = np.where(acc > 0,
+                                tokens[lanes, np.maximum(pos - 1, 0)],
+                                prev).astype(np.int32)
+                rounds += 1
+                offered += int(active.sum()) * K
+                drafted_hits += int(np.maximum(acc - 1, 0).sum())
+                rollbacks += int((active & (acc < K + 1)).sum())
+                if tel:
+                    depth_h.observe_many(acc[active])
+        self._registry.counter(
+            "spec.rounds", "speculative draft/verify rounds").inc(rounds)
+        self._registry.counter(
+            "spec.drafted_tokens", "draft slots offered for "
+            "verification").inc(offered)
+        self._registry.counter(
+            "spec.drafted_accepted",
+            "drafted tokens accepted beyond the per-round floor of "
+            "1").inc(drafted_hits)
+        self._registry.counter(
+            "spec.rollbacks", "lane cache rewinds (acc < K+1)").inc(
+            rollbacks)
         return tokens
 
     def _lockstep_tail(self, dec, state, prev, pos, valid, tokens):

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+
 
 class DraftProposer:
     """Protocol: propose K next tokens per lane from decoded prefixes."""
@@ -48,6 +50,9 @@ class SuffixDraft(DraftProposer):
         tokens = np.asarray(tokens)
         pos = np.asarray(pos)
         B = tokens.shape[0]
+        _metrics.registry().counter(
+            "draft.proposed_tokens",
+            "draft tokens proposed (suffix matcher)").inc(B * k)
         out = np.zeros((B, k), np.int32)
         for b in range(B):
             out[b] = self._lane(tokens[b], int(pos[b]), k)

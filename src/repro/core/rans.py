@@ -37,9 +37,22 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+
 RANS_L = 1 << 23          # lower bound of the normalized state interval
 _STATE_BYTES = 4          # final state flush (state < 256 * RANS_L < 2**32)
 MAX_PRECISION = 23        # total = 2**bits must satisfy total <= RANS_L
+
+
+def _count_flush(n_streams: int, n_bytes: int) -> None:
+    """Cold-path coder telemetry — stream flushes only, never per step.
+    Goes to the process-global registry: the coder has no injection point
+    and flush counts are process-wide facts."""
+    reg = _metrics.registry()
+    reg.counter("rans.streams_flushed",
+                "rANS streams materialized").inc(n_streams)
+    reg.counter("rans.stream_bytes",
+                "total rANS payload bytes flushed").inc(n_bytes)
 
 _U64 = np.uint64
 _U8 = np.uint8
@@ -153,6 +166,7 @@ class BatchedRansEncoder:
             head = bytes((state >> (8 * i)) & 0xFF
                          for i in range(_STATE_BYTES))
             out.append(head + buf[b, cur[b]:].tobytes())
+        _count_flush(len(out), sum(len(s) for s in out))
         return out
 
 
@@ -219,10 +233,22 @@ class SlotRansEncoder:
         """Number of recorded, unflushed steps in ``slot``."""
         return len(self._steps[slot])
 
+    def slot_cost_bits(self, slot: int) -> float:
+        """Quantized code length of the slot's recorded steps,
+        sum(bits - log2 freq) — per-chunk diagnostics, read before
+        ``flush_slot`` clears the record. Cold path: one numpy pass over
+        the chunk, nothing per step."""
+        steps = self._steps[slot]
+        if not steps:
+            return 0.0
+        a = np.asarray(steps, np.float64)          # rows: (start, freq, bits)
+        return float(a[:, 2].sum() - np.log2(a[:, 1]).sum())
+
     def flush_slot(self, slot: int) -> bytes:
         """Materialize and clear one slot's stream (LIFO backward pass)."""
         out = _encode_steps(self._steps[slot])
         self._steps[slot] = []
+        _count_flush(1, len(out))
         return out
 
 
@@ -251,6 +277,10 @@ class BatchedRansDecoder:
         for i in range(_STATE_BYTES):
             self._x |= self._buf[:, i].astype(_U64) << _U64(8 * i)
         self._cur = np.full(B, _STATE_BYTES, np.int64)
+        #: interval freqs of the most recent ``advance``/``get`` call
+        #: (inactive lanes read 1) — the per-chunk diagnostics accrual
+        #: reads this instead of recomputing CDF lookups (DESIGN.md §10)
+        self.last_freq = np.ones(B, np.int64)
 
     # ------------------------------------------------- per-slot attachment
     def attach(self, slot: int, data: bytes) -> None:
@@ -319,6 +349,7 @@ class BatchedRansDecoder:
               + _as_u64(slots) - _as_u64(starts))
         self._x = np.where(mask, nx, self._x)
         self._renorm(mask)
+        self.last_freq = freqs
         return syms
 
     def get(self, cdfs: np.ndarray, bits: int, mask=None) -> np.ndarray:

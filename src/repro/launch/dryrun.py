@@ -18,9 +18,10 @@ import argparse
 import json
 import pathlib
 import time
-import traceback
 
 import jax
+
+from repro import obs
 
 WIRE_CORRECTION = os.environ.get("REPRO_EXPLICIT_TP", "0") == "1"
 
@@ -342,14 +343,14 @@ def run_cells(cells, mesh_kind: str, *, force=False, attn_impl="masked",
             out.write_text(json.dumps(
                 {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
                  "skipped": why}, indent=1))
-            print(f"[skip] {name}: {why}", flush=True)
+            obs.log("dryrun.skip", cell=name, why=why)
             skip += 1
             continue
         if out.exists() and not force:
-            print(f"[cached] {name}", flush=True)
+            obs.log("dryrun.cached", cell=name)
             ok += 1
             continue
-        print(f"[lower] {name} ...", flush=True)
+        obs.log("dryrun.lower", cell=name)
         try:
             extra = {"kv_cache_dtype": "int8"} if kv_int8 else None
             res = lower_cell(arch_id, shape_name, mesh, attn_impl=attn_impl,
@@ -386,17 +387,25 @@ def run_cells(cells, mesh_kind: str, *, force=False, attn_impl="masked",
                 res["roofline"] = rd
             out.write_text(json.dumps(res, indent=1))
             r = res["roofline"]
-            print(f"[ok] {name}: compile={res['compile_s']}s "
-                  f"mem/dev={res['memory']['bytes_per_device']/2**30:.2f}GiB "
-                  f"bottleneck={r['bottleneck']} "
-                  f"roofline_frac={r['roofline_fraction']:.3f}", flush=True)
+            obs.log("dryrun.ok", cell=name, compile_s=res["compile_s"],
+                    mem_gib=round(
+                        res["memory"]["bytes_per_device"] / 2**30, 2),
+                    bottleneck=r["bottleneck"],
+                    roofline_frac=round(r["roofline_fraction"], 3))
             ok += 1
         except Exception as e:  # noqa: BLE001 — record, continue
-            out.with_suffix(".err").write_text(
-                f"{e}\n{traceback.format_exc()}")
-            print(f"[FAIL] {name}: {e}", flush=True)
+            # structured error sidecar + counted failure (obs.log_exception
+            # increments errors.total / errors.dryrun.cell_failed, so a
+            # sweep's failures are countable in the registry snapshot, not
+            # only greppable from .err files)
+            out.with_suffix(".err").write_text(json.dumps(
+                {"cell": name, "error": obs.exception_record(e)}, indent=1))
+            obs.log_exception("dryrun.cell_failed", e, cell=name)
+            obs.registry().counter(
+                "dryrun.cell_failures", "dry-run cells that failed to "
+                "lower/compile").inc()
             fail += 1
-    print(f"done: ok={ok} fail={fail} skip={skip}", flush=True)
+    obs.log("dryrun.done", ok=ok, fail=fail, skip=skip)
     return fail
 
 

@@ -24,6 +24,8 @@ import time
 
 import numpy as np
 
+from repro import obs
+
 
 def train_main(args) -> int:
     import jax
@@ -63,8 +65,7 @@ def train_main(args) -> int:
             opt_state = restored["opt"]
             start = int(restored["pipe"]["step"])
             pipe.state.step = start
-            print(f"[resume] restored step {step} -> continuing at {start}",
-                  flush=True)
+            obs.log("train.resume", restored=step, continuing=start)
 
     step_fn = make_train_step(cfg, mesh, opt=opt,
                               num_microbatches=args.microbatches,
@@ -76,11 +77,14 @@ def train_main(args) -> int:
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         pipe.advance()
         if step % args.log_every == 0:
-            print(f"step {step} loss {float(metrics['loss']):.4f} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({time.time()-t0:.1f}s)", flush=True)
+            obs.log("train.step", step=step,
+                    loss=round(float(metrics["loss"]), 4),
+                    gnorm=round(float(metrics["grad_norm"]), 3),
+                    elapsed_s=round(time.time() - t0, 1))
         if args.crash_at is not None and step == args.crash_at:
-            print("[fault-injection] crashing now", flush=True)
+            # StreamHandler flushes per record, so this line survives the
+            # hard exit below (os._exit skips interpreter buffers)
+            obs.log("train.fault_injection", step=step)
             os._exit(42)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, step + 1, {
@@ -92,7 +96,7 @@ def train_main(args) -> int:
             "params": params, "opt": opt_state,
             "pipe": {"step": np.asarray(args.steps, np.int64)},
         })
-    print(f"[done] final loss {float(metrics['loss']):.4f}", flush=True)
+    obs.log("train.done", final_loss=round(float(metrics["loss"]), 4))
     return 0
 
 
@@ -106,8 +110,7 @@ def watchdog(args) -> int:
         if rc == 0:
             return 0
         attempts += 1
-        print(f"[watchdog] trainer exited rc={rc}; restart {attempts}",
-              flush=True)
+        obs.log_error("train.watchdog_restart", rc=rc, restart=attempts)
         # after a crash, never replay the same fault injection
         if "--crash-at" in argv:
             i = argv.index("--crash-at")
@@ -139,6 +142,9 @@ def main():
     ap.add_argument("--watchdog", action="store_true")
     ap.add_argument("--max-restarts", type=int, default=3)
     args = ap.parse_args()
+    # the trainer's operational log is its stdout contract: the watchdog
+    # test greps the child's stdout for train.resume / train.done
+    obs.configure(stream=sys.stdout)
     if args.watchdog:
         raise SystemExit(watchdog(args))
     raise SystemExit(train_main(args))

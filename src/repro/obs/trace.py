@@ -1,0 +1,131 @@
+"""Host-side span tracing with optional mirroring into JAX device traces.
+
+``with obs.trace.span("decode.verify_round"): ...`` times a region of
+host code and records the wall time into a log2 histogram named
+``span.<path>.seconds`` — where ``<path>`` is the slash-joined nesting
+path (``service.step/model.decode_step``), built from a thread-local
+span stack, so one histogram exists per distinct call *position*, not
+just per label.
+
+When JAX is in the process, every span also enters a
+``jax.profiler.TraceAnnotation`` with the same label, so capturing a
+device profile (XProf/Perfetto) shows the host spans interleaved with
+the XLA ops they bracket — one vocabulary across host and device
+timelines. ``TraceAnnotation`` is a no-op-cheap TraceMe when no profiler
+session is active; mirroring can still be forced off with
+``set_jax_mirror(False)``. JAX is never imported by this module — the
+mirror activates only if something else already imported jax.
+
+Spans follow the registry switch: ``span()`` returns a shared null
+context manager when the target registry (argument, else the process
+default) is disabled, so a disabled process pays one attribute check
+per span site.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+from . import metrics as _metrics
+
+_tls = threading.local()
+_enabled = True          # module master switch (obs.trace.enable(False))
+_jax_mirror = True       # mirror into jax.profiler.TraceAnnotation
+_TraceAnnotation = None  # resolved lazily; False = unavailable
+
+
+def enable(on: bool = True) -> None:
+    global _enabled
+    _enabled = bool(on)
+
+
+def set_jax_mirror(on: bool) -> None:
+    global _jax_mirror
+    _jax_mirror = bool(on)
+
+
+def _stack() -> list:
+    s = getattr(_tls, "stack", None)
+    if s is None:
+        s = _tls.stack = []
+    return s
+
+
+def current() -> str:
+    """Slash-joined path of the innermost open span ('' outside spans)."""
+    s = _stack()
+    return "/".join(s) if s else ""
+
+
+def _resolve_jax():
+    """Find jax.profiler.TraceAnnotation iff jax is already imported."""
+    global _TraceAnnotation
+    if _TraceAnnotation is None and "jax" in sys.modules:
+        try:
+            from jax.profiler import TraceAnnotation
+            _TraceAnnotation = TraceAnnotation
+        except Exception:       # pragma: no cover - jax without profiler
+            _TraceAnnotation = False
+    return _TraceAnnotation
+
+
+class _NullSpan:
+    """Shared no-op context manager for disabled tracing."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullSpan()
+
+#: shared no-op span — for call sites that sample their own spans
+#: (e.g. the scheduler times every Nth step) and need the "not this
+#: time" branch to cost one attribute read
+NULL = _NULL
+
+
+class Span:
+    __slots__ = ("name", "_reg", "_t0", "_jax", "path")
+
+    def __init__(self, name: str, reg):
+        self.name = name
+        self._reg = reg
+        self._jax = None
+        self.path = name
+
+    def __enter__(self):
+        stack = _stack()
+        stack.append(self.name)
+        self.path = "/".join(stack)
+        if _jax_mirror:
+            ta = _resolve_jax()
+            if ta:
+                self._jax = ta(self.name)
+                self._jax.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self._t0
+        if self._jax is not None:
+            self._jax.__exit__(*exc)
+        _stack().pop()
+        self._reg.histogram(
+            "span." + self.path + ".seconds",
+            "wall seconds spent in this span path").observe(dt)
+        return False
+
+
+def span(name: str, registry=None):
+    """Open a traced region. Records into ``registry`` (default: the
+    process-global one). Returns a shared null context manager when
+    tracing or the target registry is disabled."""
+    reg = registry if registry is not None else _metrics.registry()
+    if not (_enabled and reg.enabled):
+        return _NULL
+    return Span(name, reg)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import api as model_api
 
@@ -42,20 +43,26 @@ class ModelPredictor:
         if cfg.family == "moe" and mesh is not None:
             fam_kw["mesh"] = mesh
 
+        # jax.named_scope labels below mirror the host-span names (minus
+        # the dots XProf dislikes) so a captured device trace interleaves
+        # with the obs.trace host timeline under one vocabulary.
         @jax.jit
         def _score(params, tokens, extra):
-            inp = jnp.concatenate(
-                [jnp.full((tokens.shape[0], 1), self.bos_id, tokens.dtype),
-                 tokens[:, :-1]], axis=1)
-            batch = {"tokens": inp, **extra}
-            logits = model_api.forward(params, cfg, batch, **fam_kw)
-            return logits[..., :cfg.vocab_size]
+            with jax.named_scope("model_score"):
+                inp = jnp.concatenate(
+                    [jnp.full((tokens.shape[0], 1), self.bos_id,
+                              tokens.dtype),
+                     tokens[:, :-1]], axis=1)
+                batch = {"tokens": inp, **extra}
+                logits = model_api.forward(params, cfg, batch, **fam_kw)
+                return logits[..., :cfg.vocab_size]
 
         @jax.jit
         def _decode(params, cache, prev, extra):
-            logits, cache = model_api.decode_step(params, cfg, cache, prev,
-                                                  **fam_kw)
-            return logits[..., :cfg.vocab_size], cache
+            with jax.named_scope("model_decode_step"):
+                logits, cache = model_api.decode_step(params, cfg, cache,
+                                                      prev, **fam_kw)
+                return logits[..., :cfg.vocab_size], cache
 
         @jax.jit
         def _verify(params, cache, seq, extra):
@@ -70,8 +77,10 @@ class ModelPredictor:
             del extra
 
             def step(c, tok):
-                lg, c2 = model_api.decode_step(params, cfg, c, tok, **fam_kw)
-                return c2, (lg[..., :cfg.vocab_size], c2)
+                with jax.named_scope("model_verify_step"):
+                    lg, c2 = model_api.decode_step(params, cfg, c, tok,
+                                                   **fam_kw)
+                    return c2, (lg[..., :cfg.vocab_size], c2)
 
             _, (logits, snaps) = jax.lax.scan(step, cache,
                                               jnp.swapaxes(seq, 0, 1))
@@ -131,9 +140,10 @@ class ModelPredictor:
 
     # --------------------------------------------------- PredictorAdapter
     def score_chunks(self, tokens: np.ndarray) -> np.ndarray:
-        tokens = jnp.asarray(tokens, jnp.int32)
-        return np.asarray(
-            self._score(self.params, tokens, self.extra_batch))
+        with obs.span("model.score"):
+            tokens = jnp.asarray(tokens, jnp.int32)
+            return np.asarray(
+                self._score(self.params, tokens, self.extra_batch))
 
     def begin_decode(self, batch: int):
         max_len = getattr(self, "_decode_max_len", 1024)
@@ -152,10 +162,11 @@ class ModelPredictor:
         self._decode_max_len = int(n)
 
     def decode_step(self, state, prev_tokens: np.ndarray):
-        logits, state = self._decode(self.params, state,
-                                     jnp.asarray(prev_tokens, jnp.int32),
-                                     self.extra_batch)
-        return np.asarray(logits), state
+        with obs.span("model.decode_step"):
+            logits, state = self._decode(self.params, state,
+                                         jnp.asarray(prev_tokens, jnp.int32),
+                                         self.extra_batch)
+            return np.asarray(logits), state
 
     def verify_steps(self, state, seq: np.ndarray):
         """Speculative-decode verify program: score seq (B, T) — column 0
@@ -164,16 +175,19 @@ class ModelPredictor:
         bit-identical to T lock-step decode_step calls, snapshots) where
         ``snapshots`` is the opaque stacked-cache value ``rollback``
         consumes."""
-        logits, snaps = self._verify(self.params, state,
-                                     jnp.asarray(seq, jnp.int32),
-                                     self.extra_batch)
-        return np.asarray(logits), snaps
+        with obs.span("model.verify"):
+            logits, snaps = self._verify(self.params, state,
+                                         jnp.asarray(seq, jnp.int32),
+                                         self.extra_batch)
+            return np.asarray(logits), snaps
 
     def rollback(self, snapshots, accepted: np.ndarray):
         """Restore each lane's cache to the state after it consumed
         ``accepted[b]`` verify inputs (0 = the pre-verify cache) — the
         speculative decoder's masked per-lane rewind. One jitted gather."""
-        return self._rollback(snapshots, jnp.asarray(accepted, jnp.int32))
+        with obs.span("model.rollback"):
+            return self._rollback(snapshots,
+                                  jnp.asarray(accepted, jnp.int32))
 
     def reset_slots(self, state, mask: np.ndarray):
         """Reset the cache lanes selected by ``mask`` (B,) bool to a fresh
@@ -181,7 +195,8 @@ class ModelPredictor:
         lanes — the slot-refill primitive of the continuous-batching
         scheduler (repro.service). One jitted call, no recompilation:
         the mask is a runtime input."""
-        return self._reset(state, jnp.asarray(mask, bool))
+        with obs.span("model.reset_slots"):
+            return self._reset(state, jnp.asarray(mask, bool))
 
     # ----------------------------------------------------------- sampling
     def generate(self, n_tokens: int, batch: int = 1, *, temperature=1.0,

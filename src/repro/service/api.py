@@ -26,6 +26,7 @@ from repro.core.compressor import (CODEC_AC, CODEC_RANS, VERSION_V4,
                                    CompressionStats, ContainerError,
                                    LLMCompressor, check_container_config,
                                    parse_container, write_container)
+from repro.obs import MetricsRegistry
 from .scheduler import SlotScheduler
 from .session import COMPRESS, DECOMPRESS, ChunkTask, Job, JobHandle
 
@@ -34,13 +35,39 @@ class ServiceError(RuntimeError):
     """Internal service failure (scheduler stall, double completion)."""
 
 
+class ServiceStats:
+    """``service.stats`` — both the old attribute API and the new
+    structured snapshot.
+
+    Attribute reads (``svc.stats.occupancy``, ``svc.stats.model_steps``)
+    delegate to the scheduler's counter-backed ``SchedulerStats`` view,
+    so pre-PR-7 callers are unchanged; *calling* it
+    (``svc.stats()``) returns the full structured snapshot dict —
+    the ``CompressionService.stats()`` surface from ISSUE 7."""
+
+    __slots__ = ("_service",)
+
+    def __init__(self, service: "CompressionService"):
+        self._service = service
+
+    def __getattr__(self, name):
+        return getattr(self._service.scheduler.stats, name)
+
+    def __call__(self) -> dict:
+        return self._service.snapshot()
+
+    def __repr__(self) -> str:
+        return f"ServiceStats({self._service.scheduler.stats!r})"
+
+
 class CompressionService:
     """Continuous-batching compression/decompression server over one
     predictor. See repro.service.__init__ for usage."""
 
     def __init__(self, predictor, *, slots: int = 8, chunk_size: int = 256,
                  topk: int = 0, precision: int = DEFAULT_PRECISION,
-                 container_version: int = VERSION_V4):
+                 container_version: int = VERSION_V4,
+                 registry: MetricsRegistry | None = None):
         if topk and topk >= predictor.vocab_size:
             topk = 0
         if (1 << precision) <= (topk + 1 if topk else predictor.vocab_size):
@@ -54,12 +81,19 @@ class CompressionService:
         self.topk = int(topk)
         self.precision = int(precision)
         self.container_version = int(container_version)
+        # private per-service registry by default: stats() must describe
+        # THIS service's traffic, not every service in the process. Pass
+        # obs.registry() to aggregate into the process-global view.
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(name="service")
         self.scheduler = SlotScheduler(predictor, n_slots=self.slots,
                                        chunk_size=self.chunk_size,
                                        topk=self.topk,
-                                       precision=self.precision)
+                                       precision=self.precision,
+                                       registry=self.registry)
         self._next_job = 0
         self._legacy: LLMCompressor | None = None
+        self._stats = ServiceStats(self)
 
     # ------------------------------------------------------------- submit
     def submit_compress(self, tokens, *, priority: int = 0) -> JobHandle:
@@ -81,7 +115,9 @@ class CompressionService:
                 header_bytes=len(blob) - payload)
 
         job = Job(self._new_job_id(), COMPRESS, priority, n_chunks, n,
-                  assemble)
+                  assemble, codec="rans", registry=self.registry)
+        self.registry.counter("service.jobs_submitted").inc()
+        self.registry.counter("service.compress_jobs").inc()
         if n_chunks == 0:
             # empty input: a valid zero-chunk container, no scheduler
             # involvement (there is no chunk completion to wait for)
@@ -115,7 +151,11 @@ class CompressionService:
         job = Job(self._new_job_id(), DECOMPRESS, priority, info.n_chunks,
                   info.n_tokens,
                   lambda chunks: np.concatenate(chunks)[:info.n_tokens]
-                  if chunks else np.zeros(0, np.int32))
+                  if chunks else np.zeros(0, np.int32),
+                  codec="rans" if info.codec == CODEC_RANS else "ac",
+                  registry=self.registry)
+        self.registry.counter("service.jobs_submitted").inc()
+        self.registry.counter("service.decompress_jobs").inc()
         if info.n_chunks == 0:
             job.resolve(np.zeros(0, np.int32))   # valid empty container
             return JobHandle(job, self)
@@ -147,8 +187,38 @@ class CompressionService:
                     f"({len(job._results)}/{job.n_chunks} chunks)")
 
     @property
-    def stats(self):
-        return self.scheduler.stats
+    def stats(self) -> ServiceStats:
+        """Attribute-compatible stats view; call it (``svc.stats()``) for
+        the structured snapshot."""
+        return self._stats
+
+    def snapshot(self) -> dict:
+        """Structured telemetry snapshot of this service: scheduler
+        counters + occupancy, job counters, chunk bits/token summary,
+        draft-acceptance rate (None until a speculative decode ran), and
+        the raw registry dump (JSON-serializable)."""
+        reg = self.registry
+        sched = self.scheduler.stats.snapshot()
+        h = reg.get("chunk.bits_per_token")
+        bpt = None
+        if h is not None and h.count:
+            bpt = {"count": h.count, "mean": h.mean,
+                   "p50": h.quantile(0.5), "p99": h.quantile(0.99)}
+        offered = reg.value("spec.drafted_tokens")
+        acc = reg.value("spec.drafted_accepted")
+        return {
+            "scheduler": sched,
+            "occupancy": sched["occupancy"],
+            "jobs": {
+                "submitted": reg.value("service.jobs_submitted"),
+                "failed": reg.value("service.jobs_failed"),
+                "compress": reg.value("service.compress_jobs"),
+                "decompress": reg.value("service.decompress_jobs"),
+            },
+            "chunk_bits_per_token": bpt,
+            "draft_acceptance": (acc / offered) if offered else None,
+            "metrics": reg.snapshot(),
+        }
 
     # ------------------------------------------------------------ helpers
     def _new_job_id(self) -> int:
@@ -159,5 +229,6 @@ class CompressionService:
         if self._legacy is None:
             self._legacy = LLMCompressor(
                 self.predictor, chunk_size=self.chunk_size, topk=self.topk,
-                precision=self.precision, decode_batch=self.slots)
+                precision=self.precision, decode_batch=self.slots,
+                registry=self.registry)
         return self._legacy

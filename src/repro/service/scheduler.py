@@ -27,36 +27,109 @@ decoder already relies on), and per-slot cache positions make a refilled
 lane's computation identical to a fresh-cache decode. So a container
 compressed by the service decodes through ``LLMCompressor`` and vice
 versa, regardless of what traffic shared the batch.
+
+Telemetry (DESIGN.md §10): the scheduler owns a ``MetricsRegistry``
+(private by default, injectable). Its load-bearing counters
+(``scheduler.model_steps`` …) are ALWAYS maintained — ``SchedulerStats``
+is now a thin attribute view over them — while everything optional
+(per-slot code-length accrual for chunk diagnostics, the
+``chunk.bits_per_token`` histogram, step spans, periodic progress lines)
+is gated on ``registry.enabled``, and none of it can change output
+bytes: every telemetry read happens *after* the coder ops it describes.
 """
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro import obs
 from repro.core import rans
 from repro.core.cdf import DEFAULT_PRECISION, full_cdf_jit, topk_cdf_jit
 from repro.core.compressor import ContainerError
+from repro.obs import ChunkDiagnostics, MetricsRegistry
 from .session import COMPRESS, ChunkTask
 
+_HELP = {
+    "model_steps": "fixed-shape decode_step invocations",
+    "lane_steps": "model_steps x B (capacity offered)",
+    "token_steps": "active-lane tokens actually coded",
+    "chunks_completed": "chunk tasks finished (either direction)",
+    "refills": "slot assignments from the queue",
+    "chunk_failures": "chunk tasks that completed with an error",
+    "escapes": "escape symbols coded (top-k mode, both directions)",
+}
 
-@dataclass
+
+class _CounterField:
+    """Read/write attribute backed by a ``scheduler.<name>`` counter, so
+    ``stats.model_steps += 1`` and ``registry.value(...)`` are one value."""
+
+    __slots__ = ("metric",)
+
+    def __init__(self, name: str):
+        self.metric = "scheduler." + name
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return obj.registry.counter(self.metric).value
+
+    def __set__(self, obj, v) -> None:
+        obj.registry.counter(self.metric).value = v
+
+
 class SchedulerStats:
-    model_steps: int = 0          # fixed-shape decode_step invocations
-    lane_steps: int = 0           # model_steps × B (capacity offered)
-    token_steps: int = 0          # active-lane tokens actually coded
-    chunks_completed: int = 0
-    refills: int = 0
+    """Compatibility view over the scheduler's registry counters.
+
+    Pre-PR-7 code (tests, service_bench) reads and writes
+    ``stats.model_steps`` etc. as plain attributes; those now pass
+    through to ``scheduler.*`` counters in a ``MetricsRegistry``.
+    Constructed standalone it carries its own private registry, so
+    ``SchedulerStats()`` in one test cannot see another test's traffic.
+    Calling the instance returns the structured snapshot.
+    """
+
+    model_steps = _CounterField("model_steps")
+    lane_steps = _CounterField("lane_steps")
+    token_steps = _CounterField("token_steps")
+    chunks_completed = _CounterField("chunks_completed")
+    refills = _CounterField("refills")
+    chunk_failures = _CounterField("chunk_failures")
+    escapes = _CounterField("escapes")
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(name="scheduler")
+        for f in _HELP:
+            self.registry.counter("scheduler." + f, _HELP[f])
+
+    @property
+    def steps(self) -> int:
+        """Alias for ``model_steps`` (ISSUE-era name)."""
+        return self.model_steps
 
     @property
     def occupancy(self) -> float:
         """Fraction of offered lane-steps that coded a real token.
         0.0 when ``run()`` completed without executing a step (e.g. every
         job rejected at submit) — never a ZeroDivisionError."""
-        if self.lane_steps == 0:
+        lane = self.lane_steps
+        if lane == 0:
             return 0.0
-        return self.token_steps / self.lane_steps
+        return self.token_steps / lane
+
+    def snapshot(self) -> dict:
+        out = {f: getattr(self, f) for f in _HELP}
+        out["occupancy"] = self.occupancy
+        return out
+
+    def __call__(self) -> dict:
+        return self.snapshot()
+
+    def __repr__(self) -> str:  # close to the old dataclass repr
+        body = ", ".join(f"{f}={getattr(self, f)}" for f in _HELP)
+        return f"SchedulerStats({body})"
 
 
 class SlotScheduler:
@@ -67,8 +140,18 @@ class SlotScheduler:
     Legacy AC containers take the grouped path in the service API.
     """
 
+    #: emit a ``scheduler.progress`` log line every N model steps
+    #: (0 disables; only when the registry is enabled)
+    log_every = 4096
+
+    #: time one full ``service.step`` span every N model steps (sampled:
+    #: a per-step span costs more than the whole telemetry budget on a
+    #: model-free predictor; the histogram notes the sampling rate)
+    span_every = 16
+
     def __init__(self, predictor, *, n_slots: int, chunk_size: int,
-                 topk: int = 0, precision: int = DEFAULT_PRECISION):
+                 topk: int = 0, precision: int = DEFAULT_PRECISION,
+                 registry: MetricsRegistry | None = None):
         if not 0 < precision <= rans.MAX_PRECISION:
             raise ValueError(f"precision {precision} outside rANS range "
                              f"(1..{rans.MAX_PRECISION})")
@@ -108,7 +191,33 @@ class SlotScheduler:
         self._enc = rans.SlotRansEncoder(B)
         self._state = None              # model decode state, created lazily
         self._used = np.zeros(B, bool)  # lanes that have held a chunk
-        self.stats = SchedulerStats()
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(name="scheduler")
+        self.stats = SchedulerStats(self.registry)
+        # hot-path counters, resolved once (property/setter would re-hash
+        # the metric name every model step)
+        self._c_steps = self.registry.counter("scheduler.model_steps")
+        self._c_lanes = self.registry.counter("scheduler.lane_steps")
+        self._c_tokens = self.registry.counter("scheduler.token_steps")
+        self._c_chunks = self.registry.counter("scheduler.chunks_completed")
+        self._c_refills = self.registry.counter("scheduler.refills")
+        self._c_failures = self.registry.counter("scheduler.chunk_failures")
+        self._c_escapes = self.registry.counter("scheduler.escapes")
+        self._h_bpt = self.registry.histogram(
+            "chunk.bits_per_token", "realized payload bits/token per chunk")
+        self._h_step = self.registry.histogram(
+            "span.service.step.seconds",
+            f"wall seconds per scheduler step (1-in-{self.span_every} "
+            f"sampled)")
+        # per-slot diagnostics accrual (registry.enabled only). Decode
+        # lanes: the coder's interval freq for position t lands in
+        # _fbuf[b, t] (one fancy write per step, all log2 math deferred
+        # to _finish_slot); compress lanes cost nothing per step — the
+        # slot encoder's recorded steps are priced at flush. _nesc
+        # counts escape symbols per slot (both directions).
+        self._lanes = np.arange(B)
+        self._fbuf = np.ones((B, C), np.int64)
+        self._nesc = np.zeros(B, np.int64)
 
     # ------------------------------------------------------------- intake
     def submit(self, task: ChunkTask, priority: int = 0) -> None:
@@ -156,6 +265,7 @@ class SlotScheduler:
             self._t[b] = 0
             self._valid[b] = task.valid
             self._prev[b] = bos
+            self._nesc[b] = 0
             if task.kind == COMPRESS:
                 self._tok_buf[b, :] = 0
                 self._tok_buf[b, :task.valid] = task.tokens
@@ -163,7 +273,7 @@ class SlotScheduler:
             else:
                 self._dec.attach(b, task.stream)
             mask[b] = True
-            self.stats.refills += 1
+            self._c_refills.inc()
         if mask.any() and self._state is not None:
             if hasattr(self.predictor, "reset_slots"):
                 self._state = self.predictor.reset_slots(self._state, mask)
@@ -187,66 +297,94 @@ class SlotScheduler:
         m = self._active
         if not m.any():
             return False
-        logits, self._state = self.predictor.decode_step(self._state,
-                                                         self._prev)
-        logits = np.asarray(logits)
-        dm = m & self._is_dec
-        cm = m & ~self._is_dec
-        truth = self._tok_buf[np.arange(self.B), self._t % self.C]
-        if self.topk:
-            # fused device top-k -> quantized CDF (kernels/ac_cdf.py on
-            # TPU): no host pmf cumsum per step; same integers
-            ids, cdfs = topk_cdf_jit(logits, self.topk, self.precision)
-            ids = np.asarray(ids)
-            cdfs = np.asarray(cdfs, np.int64)                # (B, K+2)
-            syms = np.zeros(self.B, np.int64)
-            if dm.any():
-                slots = self._dec.get(cdfs, self.precision, dm)
-                esc = dm & (slots == self.topk)
-                syms = np.take_along_axis(
-                    ids, np.minimum(slots, self.topk - 1)[:, None],
-                    axis=-1)[:, 0].astype(np.int64)
-                if esc.any():
-                    u = self._dec.get_uniform(self._esc_bits, esc)
-                    syms = np.where(esc, u, syms)
-            if cm.any():
-                match = ids == truth[:, None]
-                has = match.any(axis=-1)
-                slot_e = np.where(has, match.argmax(axis=-1), self.topk)
-                starts = np.take_along_axis(cdfs, slot_e[:, None],
-                                            axis=1)[:, 0]
-                ends = np.take_along_axis(cdfs, slot_e[:, None] + 1,
-                                          axis=1)[:, 0]
-                self._enc.put(starts, ends - starts, self.precision, cm)
-                em = cm & ~has
-                if em.any():
-                    self._enc.put_uniform(truth, self._esc_bits, em)
-        else:
-            cdfs = np.asarray(full_cdf_jit(logits, self.precision),
-                              np.int64)                       # (B, V+1)
-            syms = np.zeros(self.B, np.int64)
-            if dm.any():
-                syms = self._dec.get(cdfs, self.precision, dm)
-            if cm.any():
-                self._enc.put_symbols(truth.astype(np.int64), cdfs,
-                                      self.precision, cm)
-        # write decoded tokens; advance every active lane
-        nxt = np.where(dm, syms, truth).astype(np.int32)
-        self._tok_buf[dm, self._t[dm]] = nxt[dm]
-        self._prev = np.where(m, nxt, self._prev).astype(np.int32)
-        self._t[m] += 1
-        self.stats.model_steps += 1
-        self.stats.lane_steps += self.B
-        self.stats.token_steps += int(m.sum())
-        for b in np.nonzero(m & (self._t >= self._valid))[0]:
-            self._finish_slot(int(b))
+        tel = self.registry.enabled
+        sp = obs.span("service.step", self.registry) \
+            if tel and self.span_every \
+            and self._c_steps.value % self.span_every == 0 else obs.trace.NULL
+        with sp:
+            logits, self._state = self.predictor.decode_step(self._state,
+                                                             self._prev)
+            logits = np.asarray(logits)
+            dm = m & self._is_dec
+            cm = m & ~self._is_dec
+            tq = self._t % self.C
+            truth = self._tok_buf[self._lanes, tq]
+            if self.topk:
+                # fused device top-k -> quantized CDF (kernels/ac_cdf.py on
+                # TPU): no host pmf cumsum per step; same integers
+                ids, cdfs = topk_cdf_jit(logits, self.topk, self.precision)
+                ids = np.asarray(ids)
+                cdfs = np.asarray(cdfs, np.int64)                # (B, K+2)
+                syms = np.zeros(self.B, np.int64)
+                if dm.any():
+                    slots = self._dec.get(cdfs, self.precision, dm)
+                    if tel:   # coder-computed interval freqs, one write
+                        self._fbuf[self._lanes, tq] = self._dec.last_freq
+                    esc = dm & (slots == self.topk)
+                    syms = np.take_along_axis(
+                        ids, np.minimum(slots, self.topk - 1)[:, None],
+                        axis=-1)[:, 0].astype(np.int64)
+                    if esc.any():
+                        u = self._dec.get_uniform(self._esc_bits, esc)
+                        syms = np.where(esc, u, syms)
+                        self._c_escapes.inc(int(esc.sum()))
+                        if tel:
+                            self._nesc[esc] += 1
+                if cm.any():
+                    match = ids == truth[:, None]
+                    has = match.any(axis=-1)
+                    slot_e = np.where(has, match.argmax(axis=-1), self.topk)
+                    starts = np.take_along_axis(cdfs, slot_e[:, None],
+                                                axis=1)[:, 0]
+                    ends = np.take_along_axis(cdfs, slot_e[:, None] + 1,
+                                              axis=1)[:, 0]
+                    self._enc.put(starts, ends - starts, self.precision, cm)
+                    em = cm & ~has
+                    if em.any():
+                        self._enc.put_uniform(truth, self._esc_bits, em)
+                        self._c_escapes.inc(int(em.sum()))
+                        if tel:
+                            self._nesc[em] += 1
+            else:
+                cdfs = np.asarray(full_cdf_jit(logits, self.precision),
+                                  np.int64)                       # (B, V+1)
+                syms = np.zeros(self.B, np.int64)
+                if dm.any():
+                    syms = self._dec.get(cdfs, self.precision, dm)
+                    if tel:
+                        self._fbuf[self._lanes, tq] = self._dec.last_freq
+                if cm.any():
+                    self._enc.put_symbols(truth.astype(np.int64), cdfs,
+                                          self.precision, cm)
+            # write decoded tokens; advance every active lane
+            nxt = np.where(dm, syms, truth).astype(np.int32)
+            self._tok_buf[dm, self._t[dm]] = nxt[dm]
+            self._prev = np.where(m, nxt, self._prev).astype(np.int32)
+            self._t[m] += 1
+            self._c_steps.inc()
+            self._c_lanes.inc(self.B)
+            self._c_tokens.inc(int(m.sum()))
+            for b in np.nonzero(m & (self._t >= self._valid))[0]:
+                self._finish_slot(int(b))
+        if tel and self.log_every \
+                and self._c_steps.value % self.log_every == 0:
+            obs.log("scheduler.progress", steps=self._c_steps.value,
+                    occupancy=round(self.stats.occupancy, 4),
+                    chunks=self._c_chunks.value,
+                    queued=len(self._queue),
+                    failures=self._c_failures.value)
         return True
 
     def _finish_slot(self, b: int) -> None:
         task = self._tasks[b]
         try:
+            coded = 0.0
+            tel = self.registry.enabled
             if task.kind == COMPRESS:
-                task.complete(self._enc.flush_slot(b))
+                if tel:     # price the recorded steps before flush clears
+                    coded = self._enc.slot_cost_bits(b)
+                result = self._enc.flush_slot(b)
+                nbytes = len(result)
             else:
                 if not self._dec.exhausted(b):
                     raise ContainerError(
@@ -256,13 +394,31 @@ class SlotScheduler:
                         f"from the encoder's batch — see the container's "
                         f"recorded encode batch)")
                 self._dec.detach(b)
-                task.complete(self._tok_buf[b, :task.valid].copy())
+                result = self._tok_buf[b, :task.valid].copy()
+                nbytes = len(task.stream)
+                if tel:     # deferred log2 over the chunk's coder freqs
+                    f = np.maximum(self._fbuf[b, :task.valid], 1)
+                    coded = (task.valid * self.precision
+                             - float(np.log2(f).sum())
+                             + int(self._nesc[b]) * self._esc_bits)
+            diag = None
+            if tel:
+                diag = ChunkDiagnostics(
+                    chunk_index=task.chunk_index, n_tokens=task.valid,
+                    stream_bytes=nbytes, coded_bits=float(coded),
+                    n_escapes=int(self._nesc[b]))
+                self._h_bpt.observe(diag.bits_per_token)
+            task.complete(result, diag)
         except Exception as e:
+            self._c_failures.inc()
+            obs.log_exception("scheduler.chunk_failed", e,
+                              job=task.job.job_id, chunk=task.chunk_index,
+                              kind=task.kind)
             task.fail(e)
         self._tasks[b] = None
         self._active[b] = False
         self._is_dec[b] = False
-        self.stats.chunks_completed += 1
+        self._c_chunks.inc()
 
     def run(self) -> SchedulerStats:
         """Drain queue + slots to completion."""

@@ -6,6 +6,13 @@ work items (``ChunkTask``), hands them to the scheduler, and reassembles
 completed chunks — which arrive **out of order** — into the job's final
 result. Chunk independence is the format's own guarantee (paper §5.4,
 DESIGN.md §2): nothing here needs cross-chunk state.
+
+Telemetry rides along, out-of-band: the scheduler attaches an optional
+``obs.ChunkDiagnostics`` to each chunk completion, and
+``JobHandle.diagnostics`` assembles them into an ``obs.JobDiagnostics``
+(bits/token, cross-entropy, escape rate per chunk) once the job is done.
+Diagnostics never enter the container bytes; ``handle.write_sidecar()``
+puts them in a ``<path>.diag.json`` file next to it.
 """
 from __future__ import annotations
 
@@ -13,6 +20,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import numpy as np
+
+from repro import obs
 
 COMPRESS = "compress"
 DECOMPRESS = "decompress"
@@ -33,8 +42,9 @@ class ChunkTask:
     tokens: Optional[np.ndarray] = None
     stream: Optional[bytes] = None
 
-    def complete(self, result) -> None:
-        self.job._chunk_done(self.chunk_index, result)
+    def complete(self, result,
+                 diag: Optional[obs.ChunkDiagnostics] = None) -> None:
+        self.job._chunk_done(self.chunk_index, result, diag)
 
     def fail(self, err: Exception) -> None:
         self.job._fail(err)
@@ -51,29 +61,46 @@ class Job:
     # called with the in-order list of per-chunk results once all chunks
     # are done; returns the job's final result (container bytes / tokens)
     assemble: Callable[[list], Any]
+    codec: str = ""                     # codec label for diagnostics
+    registry: Optional[obs.MetricsRegistry] = None
     _results: dict = field(default_factory=dict)
+    _diags: dict = field(default_factory=dict)
     _result: Any = None
     _error: Optional[Exception] = None
     _done: bool = False
 
-    def _chunk_done(self, chunk_index: int, result) -> None:
+    def _chunk_done(self, chunk_index: int, result,
+                    diag: Optional[obs.ChunkDiagnostics] = None) -> None:
         if self._done:
             return
         if chunk_index in self._results:
             raise RuntimeError(
                 f"job {self.job_id}: chunk {chunk_index} completed twice")
         self._results[chunk_index] = result
+        if diag is not None:
+            self._diags[chunk_index] = diag
         if len(self._results) == self.n_chunks:
             try:
                 ordered = [self._results[i] for i in range(self.n_chunks)]
                 self._result = self.assemble(ordered)
             except Exception as e:          # surface through the handle
+                obs.log_exception("service.assemble_failed", e,
+                                  job=self.job_id, kind=self.kind)
+                self._count_failure()
                 self._error = e
             self._done = True
 
     def _fail(self, err: Exception) -> None:
+        if self._error is None:         # count each job's failure once
+            self._count_failure()
         self._error = err
         self._done = True
+
+    def _count_failure(self) -> None:
+        if self.registry is not None:
+            self.registry.counter(
+                "service.jobs_failed",
+                "jobs resolved with an error (await re-raises)").inc()
 
     def resolve(self, result) -> None:
         """Complete the whole job immediately (no scheduler involvement —
@@ -110,3 +137,23 @@ class JobHandle:
         if self._job._error is not None:
             raise self._job._error
         return self._job._result
+
+    @property
+    def diagnostics(self) -> obs.JobDiagnostics:
+        """The job's per-chunk compression diagnostics, assembled after
+        ``result()``. Chunks are in order; empty-at-submit chunks and
+        telemetry-disabled runs contribute no entries."""
+        job = self._job
+        self._service._run_until(job)
+        container_bytes = 0
+        if job.kind == COMPRESS and isinstance(job._result, tuple):
+            container_bytes = len(job._result[0])
+        return obs.JobDiagnostics(
+            job_id=job.job_id, kind=job.kind, codec=job.codec,
+            n_tokens=job.n_tokens, container_bytes=container_bytes,
+            chunks=[job._diags[i] for i in sorted(job._diags)])
+
+    def write_sidecar(self, container_path):
+        """Write ``diagnostics`` as JSON next to ``container_path``
+        (``<name>.diag.json``); returns the sidecar path."""
+        return obs.write_sidecar(container_path, self.diagnostics)

@@ -97,6 +97,7 @@ def test_watchdog_restart_end_to_end(tmp_path):
            "HOME": "/root"}
     out = subprocess.run(cmd, capture_output=True, text=True, env=env,
                          timeout=600)
-    assert "[fault-injection]" in out.stdout
-    assert "[resume]" in out.stdout
-    assert "[done]" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "train.fault_injection" in out.stdout
+    assert "train.resume" in out.stdout
+    assert "train.done" in out.stdout, \
+        out.stdout[-2000:] + out.stderr[-2000:]

@@ -1,0 +1,316 @@
+"""Telemetry layer (DESIGN.md §10): registry, spans, logs, diagnostics,
+and the load-bearing guarantee — telemetry NEVER changes output bytes.
+"""
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from helpers import GoldenPredictor
+from repro import obs
+from repro.core import LLMCompressor
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
+from repro.service import CompressionService
+from repro.service.scheduler import SchedulerStats
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ------------------------------------------------------------- registry
+def test_counter_gauge_roundtrip():
+    reg = MetricsRegistry()
+    c = reg.counter("x.count", "help text")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5 and reg.value("x.count") == 5
+    g = reg.gauge("x.level")
+    g.set(2.5)
+    assert reg.get("x.level").value == 2.5
+    assert reg.value("missing", default=-1) == -1
+    # same name + same type -> same instrument; wrong type -> TypeError
+    assert reg.counter("x.count") is c
+    with pytest.raises(TypeError):
+        reg.gauge("x.count")
+
+
+def test_histogram_buckets_quantiles():
+    h = Histogram("h")
+    for v in (0.0, 0.75, 1.5, 3.0, 3.9, 100.0):
+        h.observe(v)
+    assert h.count == 6
+    assert h.sum == pytest.approx(109.15)
+    # v in (2**(e-1), 2**e]: 0.75 -> le 1, 1.5 -> le 2, 3.0/3.9 -> le 4
+    assert h.nonzero_buckets() == {0.0: 1, 1.0: 1, 2.0: 1, 4.0: 2, 128.0: 1}
+    assert h.quantile(0.5) == 2.0
+    assert h.quantile(1.0) == 128.0
+    assert h.mean == pytest.approx(109.15 / 6)
+
+
+def test_snapshot_and_prometheus():
+    reg = MetricsRegistry(name="t")
+    reg.counter("a.total", "things").inc(3)
+    reg.histogram("b.seconds").observe(0.5)
+    snap = reg.snapshot()
+    assert snap["a.total"] == {"type": "counter", "value": 3}
+    assert snap["b.seconds"]["count"] == 1
+    json.loads(reg.to_json())            # JSON-serializable end to end
+    prom = reg.to_prometheus()
+    assert "# TYPE repro_a_total counter" in prom
+    assert "repro_a_total 3" in prom
+    assert 'repro_b_seconds_bucket{le="+Inf"} 1' in prom
+    assert "repro_b_seconds_count 1" in prom
+
+
+# ---------------------------------------------------------------- spans
+def test_span_nesting_records_path_histogram():
+    reg = MetricsRegistry()
+    with obs.span("outer", reg):
+        assert obs.trace.current() == "outer"
+        with obs.span("inner", reg):
+            assert obs.trace.current() == "outer/inner"
+    assert obs.trace.current() == ""
+    assert reg.get("span.outer.seconds").count == 1
+    assert reg.get("span.outer/inner.seconds").count == 1
+
+
+def test_span_disabled_is_noop():
+    reg = MetricsRegistry(enabled=False)
+    sp = obs.span("quiet", reg)
+    assert sp is obs.trace.NULL
+    with sp:
+        pass
+    assert reg.get("span.quiet.seconds") is None
+
+
+# ----------------------------------------------------------------- logs
+def test_log_error_increments_counters(capsys):
+    prev = obs.set_registry(MetricsRegistry())
+    try:
+        obs.log_error("unit.test_event", detail="x y")
+        reg = obs.registry()
+        assert reg.value("errors.total") == 1
+        assert reg.value("errors.unit.test_event") == 1
+    finally:
+        obs.set_registry(prev)
+    assert obs.format_event("e", {"a": 1, "b": "x y"}) == "e a=1 b='x y'"
+
+
+def test_exception_record_structure():
+    try:
+        raise ValueError("boom")
+    except ValueError as e:
+        rec = obs.exception_record(e)
+    assert rec["type"] == "ValueError" and rec["message"] == "boom"
+    assert rec["traceback"][-1]["func"] == "test_exception_record_structure"
+    json.dumps(rec)
+
+
+# -------------------------------------------------- SchedulerStats view
+def test_scheduler_stats_attribute_compat():
+    s = SchedulerStats()
+    assert s.occupancy == 0.0            # no steps -> no division
+    s.model_steps += 3
+    s.lane_steps += 12
+    s.token_steps += 9
+    assert (s.model_steps, s.steps) == (3, 3)
+    assert s.occupancy == pytest.approx(0.75)
+    # the attributes ARE registry counters
+    assert s.registry.value("scheduler.model_steps") == 3
+    assert s.snapshot()["occupancy"] == pytest.approx(0.75)
+    # standalone instances are isolated
+    assert SchedulerStats().model_steps == 0
+
+
+# --------------------------------------------------- service stats surface
+def _roundtrip_service(toks, enabled=True, topk=8, slots=4, chunk=16):
+    pred = GoldenPredictor()
+    svc = CompressionService(pred, slots=slots, chunk_size=chunk, topk=topk)
+    svc.registry.enabled = enabled
+    ch = svc.submit_compress(toks)
+    blob, _ = ch.result()
+    dh = svc.submit_decompress(blob)
+    out = dh.result()
+    assert np.array_equal(out, toks)
+    return svc, ch, dh, blob
+
+
+def test_service_stats_dual_api():
+    toks = np.random.default_rng(7).integers(0, 63, 150).astype(np.int32)
+    svc, *_ = _roundtrip_service(toks)
+    # attribute view (pre-PR-7 API)
+    assert svc.stats.model_steps > 0
+    assert 0.0 < svc.stats.occupancy <= 1.0
+    # callable view: structured snapshot
+    snap = svc.stats()
+    assert snap == svc.snapshot()
+    assert snap["jobs"] == {"submitted": 2, "failed": 0,
+                            "compress": 1, "decompress": 1}
+    assert snap["occupancy"] == pytest.approx(svc.stats.occupancy)
+    assert snap["chunk_bits_per_token"]["count"] == 2 * 10  # 150/16 chunks
+    assert snap["draft_acceptance"] is None   # no speculative decode ran
+    assert snap["metrics"]["scheduler.model_steps"]["value"] \
+        == svc.stats.model_steps
+    json.dumps(snap, default=str)
+
+
+def test_service_stats_prometheus_exposition():
+    toks = np.random.default_rng(8).integers(0, 63, 40).astype(np.int32)
+    svc, *_ = _roundtrip_service(toks)
+    prom = svc.registry.to_prometheus()
+    assert "repro_scheduler_model_steps" in prom
+    assert "repro_chunk_bits_per_token_count" in prom
+
+
+# -------------------------------------------------------- job diagnostics
+def test_job_diagnostics_and_sidecar(tmp_path):
+    n, chunk = 150, 16
+    toks = np.random.default_rng(9).integers(0, 63, n).astype(np.int32)
+    svc, ch, dh, blob = _roundtrip_service(toks, chunk=chunk)
+    for h, kind in ((ch, "compress"), (dh, "decompress")):
+        diag = h.diagnostics
+        assert diag.kind == kind and diag.codec == "rans"
+        assert diag.n_tokens == n
+        assert len(diag.chunks) == -(-n // chunk)
+        assert [c.chunk_index for c in diag.chunks] == list(range(10))
+        assert sum(c.n_tokens for c in diag.chunks) == n
+        assert all(c.bits_per_token > 0 for c in diag.chunks)
+        # coded_bits is the quantized information content; the realized
+        # stream adds only the coder state flush + byte rounding
+        for c in diag.chunks:
+            assert 0 < c.coded_bits <= 8 * c.stream_bytes
+        assert diag.draft_acceptance is None
+    assert ch.diagnostics.container_bytes == len(blob)
+    # compress-side and decode-side accruals price the SAME code
+    for cc, dc in zip(ch.diagnostics.chunks, dh.diagnostics.chunks):
+        assert cc.coded_bits == pytest.approx(dc.coded_bits, rel=1e-9)
+        assert cc.n_escapes == dc.n_escapes
+    # sidecar: JSON next to the container, never inside it
+    target = tmp_path / "a.llmc"
+    target.write_bytes(blob)
+    path = dh.write_sidecar(target)
+    assert path == tmp_path / "a.llmc.diag.json"
+    rec = obs.read_sidecar(target)
+    assert rec["kind"] == "decompress" and rec["n_tokens"] == n
+    assert len(rec["chunks"]) == 10
+
+
+def test_diagnostics_empty_when_disabled():
+    toks = np.random.default_rng(10).integers(0, 63, 50).astype(np.int32)
+    svc, ch, dh, _ = _roundtrip_service(toks, enabled=False)
+    assert ch.diagnostics.chunks == []
+    assert dh.diagnostics.chunks == []
+    # load-bearing counters still ran (disabled gates only extras)
+    assert svc.stats.model_steps > 0
+    assert svc.snapshot()["chunk_bits_per_token"] is None
+
+
+def test_job_failure_counted_once():
+    """A mid-flight chunk failure increments chunk_failures AND the job
+    failure counter exactly once (v3: no checksums, so the corruption
+    reaches the scheduler's exhaustion check instead of failing at
+    submit)."""
+    from repro.core import ContainerError
+    pred = GoldenPredictor()
+    comp = LLMCompressor(pred, chunk_size=16, topk=8, decode_batch=4,
+                         container_version=3)
+    toks = np.random.default_rng(11).integers(0, 63, 64).astype(np.int32)
+    blob, _ = comp.compress(toks)
+    bad = bytearray(blob)
+    bad[len(bad) // 2] ^= 0x10              # flip inside a coded stream
+    svc = CompressionService(pred, slots=4, chunk_size=16, topk=8)
+    with pytest.raises(ContainerError):
+        svc.submit_decompress(bytes(bad)).result()
+    assert svc.stats.chunk_failures >= 1
+    assert svc.registry.value("service.jobs_failed") == 1
+    assert svc.snapshot()["jobs"]["failed"] == 1
+    # errors are also countable in the process-global registry
+    assert obs.registry().value("errors.scheduler.chunk_failed") >= 1
+
+
+# --------------------------------------- byte-identity: the hard invariant
+def _compress_blob(pred, toks, enabled, *, topk, codec, draft_k=0):
+    reg = MetricsRegistry(enabled=enabled)
+    comp = LLMCompressor(pred, chunk_size=16, topk=topk, decode_batch=4,
+                         codec=codec, draft_k=draft_k, registry=reg)
+    blob, _ = comp.compress(toks)
+    out = comp.decompress(blob)
+    assert np.array_equal(out, toks), "LOSSLESS VIOLATION"
+    return blob
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 120))
+def test_byte_identity_enabled_vs_disabled(seed, n):
+    """Property: the container bytes are identical with telemetry on and
+    off, across codecs, top-k modes, and the speculative decode path."""
+    pred = GoldenPredictor()
+    toks = np.random.default_rng(seed).integers(0, 63, n).astype(np.int32)
+    for codec, topk, draft_k in (("rans", 0, 0), ("rans", 8, 0),
+                                 ("rans", 8, 4), ("ac", 8, 0)):
+        on = _compress_blob(pred, toks, True, topk=topk, codec=codec,
+                            draft_k=draft_k)
+        off = _compress_blob(pred, toks, False, topk=topk, codec=codec,
+                             draft_k=draft_k)
+        assert on == off, f"telemetry changed bytes ({codec}, k={topk})"
+
+
+def test_byte_identity_service_paths():
+    toks = np.random.default_rng(13).integers(0, 63, 300).astype(np.int32)
+    _, _, _, blob_on = _roundtrip_service(toks, enabled=True)
+    _, _, _, blob_off = _roundtrip_service(toks, enabled=False)
+    assert blob_on == blob_off
+    # and the service container matches the grouped compressor's
+    ref = LLMCompressor(GoldenPredictor(), chunk_size=16, topk=8,
+                        decode_batch=4, container_version=4)
+    assert blob_on == ref.compress(toks)[0]
+
+
+def test_speculative_diagnostics_counters():
+    """Speculative decode records rounds / acceptance / rollbacks."""
+    pred = GoldenPredictor()
+    # argmax-following stream: the suffix draft gets real acceptance
+    argmax = pred._table.argmax(axis=-1)
+    toks = np.zeros(256, np.int32)
+    prev = pred.bos_id
+    for i in range(256):
+        prev = toks[i] = argmax[prev]
+    reg = MetricsRegistry()
+    comp = LLMCompressor(pred, chunk_size=32, topk=8, decode_batch=4,
+                         draft_k=4, registry=reg)
+    blob, _ = comp.compress(toks)
+    out = comp.decompress(blob)
+    assert np.array_equal(out, toks)
+    assert reg.value("spec.rounds") > 0
+    assert reg.value("spec.drafted_tokens") > 0
+    assert 0 <= reg.value("spec.drafted_accepted") \
+        <= reg.value("spec.drafted_tokens")
+    h = reg.get("spec.accept_depth")
+    assert h is not None and h.count > 0
+
+
+# ------------------------------------------------------------- repo lint
+def _load_lint():
+    spec = importlib.util.spec_from_file_location(
+        "lint_no_print", REPO / "tools" / "lint_no_print.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_lint_tool_flags_calls_not_strings(tmp_path):
+    lint = _load_lint()
+    (tmp_path / "bad.py").write_text(
+        's = "print(this is a string literal)"\n'
+        "obj.print()\n"                      # method, not the builtin
+        "print('flagged')\n")
+    (tmp_path / "cli.py").write_text("print('allowed')\n")
+    problems = lint.lint(tmp_path)
+    assert len(problems) == 1 and "bad.py:3" in problems[0]
+
+
+def test_repo_tree_passes_lint():
+    lint = _load_lint()
+    assert lint.lint(REPO / "src" / "repro") == []

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Repo lint: forbid bare ``print(`` calls inside src/repro.
+
+Operational output must go through ``repro.obs`` (structured events with
+a level, a logger name, and an error counter — see DESIGN.md §10), not
+ad-hoc prints that vanish under services and can't be filtered.  The one
+exemption is the CLI front end (``src/repro/cli.py``): its stdout *is*
+its user interface.
+
+AST-based, not grep-based, so ``"print("`` inside a string literal (e.g.
+data/synthetic.py's corpus text) never false-positives.  Only direct
+calls to the builtin name ``print`` are flagged — a method named
+``.print`` on some object is not the builtin.
+
+Usage::
+
+    python tools/lint_no_print.py [ROOT]      # default ROOT = src/repro
+
+Exits 0 when clean, 1 with a ``file:line: message`` list otherwise.
+Wired into CI (.github/workflows/ci.yml) next to the test jobs.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ALLOWED = {"cli.py"}    # paths relative to ROOT allowed to print
+
+
+def find_prints(tree: ast.AST) -> list[int]:
+    """Line numbers of direct builtin ``print(...)`` calls."""
+    return [node.lineno for node in ast.walk(tree)
+            if isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "print"]
+
+
+def lint(root: pathlib.Path) -> list[str]:
+    problems = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel in ALLOWED:
+            continue
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError as e:
+            problems.append(f"{path}:{e.lineno}: syntax error: {e.msg}")
+            continue
+        problems.extend(
+            f"{path}:{line}: print() call — use repro.obs.log instead"
+            for line in find_prints(tree))
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(argv[0]) if argv else \
+        pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    problems = lint(root)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"lint_no_print: {len(problems)} problem(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
