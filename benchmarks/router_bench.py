@@ -1,0 +1,186 @@
+"""Mixed-traffic codec-routing benchmark + CI gate (DESIGN.md §11).
+
+The router's contract is economic: on EVERY traffic segment — model-
+friendly, human-like, adversarial-random — the routed v5 container's
+ratio must be at least ``max(pure-LLM, fallback-only) - 2%``. The 2%
+slack absorbs probe noise; structurally the routed container is the
+per-chunk minimum of both strategies at identical v5 geometry, so a
+gate failure means the router's policy (not the data) regressed.
+
+All three strategies are measured as v5 containers so index overhead is
+identical and ratios compare codec choice alone:
+
+* ``llm``      — ``route="llm"``: every chunk entropy-coded,
+* ``fallback`` — ``route=<best dictionary codec>``: no chunk touches
+  the model (zstd when the optional package is importable, else lzma;
+  raw store is always an implicit candidate),
+* ``routed``   — ``route="auto"``: probe + realized-size comparison.
+
+The predictor is a deterministic model-free table (same construction as
+the golden-container tests): next-byte logits depend only on the
+previous byte, so the benchmark needs no trained weights, runs in CI
+smoke mode in seconds, and its "LLM-generated" segment is sampled from
+the table itself — the regime where the paper's ratios live.
+
+  PYTHONPATH=src python benchmarks/router_bench.py [--smoke]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/run.py
+convention) and exits non-zero when the gate fails on any segment.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path[:0] = ["src", "."]
+
+CHUNK = 64
+SLACK = 0.98        # routed >= max(llm, fallback) * SLACK, per segment
+
+
+class _TablePredictor:
+    """Byte-level table model (vocab 258: bytes + PAD + BOS); logits for
+    position t depend only on token t-1, so teacher-forced and
+    incremental scoring agree bit-exactly with no jitted model."""
+
+    def __init__(self, seed=0):
+        self.vocab_size = 258
+        self.bos_id = 257
+        rng = np.random.default_rng(seed)
+        self._table = (rng.standard_normal((258, 258)) * 2.0).astype(
+            np.float32)
+
+    def score_chunks(self, tokens):
+        tokens = np.asarray(tokens, np.int32)
+        prev = np.concatenate(
+            [np.full((tokens.shape[0], 1), self.bos_id, np.int32),
+             tokens[:, :-1]], axis=1)
+        return self._table[prev]
+
+    def begin_decode(self, batch):
+        return None
+
+    def decode_step(self, state, prev_tokens):
+        return self._table[np.asarray(prev_tokens, np.int32)], state
+
+
+def _llm_generated(pred, n, seed=1):
+    """Bytes softmax-sampled from the predictor's own table — the
+    paper's LLM-generated-text regime, where the entropy path wins."""
+    rng = np.random.default_rng(seed)
+    out = bytearray()
+    prev = pred.bos_id
+    for _ in range(n):
+        logits = pred._table[prev][:256].astype(np.float64)
+        p = np.exp(logits - logits.max())
+        prev = int(rng.choice(256, p=p / p.sum()))
+        out.append(prev)
+    return bytes(out)
+
+
+def _human_like(n, seed=2):
+    """Markov word-salad: real byte statistics the dictionary codecs
+    exploit but the (random-table) model has never seen."""
+    rng = np.random.default_rng(seed)
+    words = [w.encode() for w in (
+        "the model the paper the chunk codec stream token entropy rate "
+        "routing fallback store index footer decode probe margin next "
+        "prediction compression container golden").split()]
+    out = bytearray()
+    while len(out) < n:
+        out += words[int(rng.integers(0, len(words)))] + b" "
+    return bytes(out[:n])
+
+
+def _random_bytes(n, seed=3):
+    return np.random.default_rng(seed).integers(
+        0, 256, n, dtype=np.uint8).tobytes()
+
+
+def _fallback_codec():
+    from repro.core import available_byte_codecs
+    return "zstd" if "zstd" in available_byte_codecs() else "lzma"
+
+
+def _ratio(pred, data, route, router=None):
+    from repro.core import LLMCompressor
+    from repro.data.tokenizer import encode
+    comp = LLMCompressor(pred, chunk_size=CHUNK, topk=32, decode_batch=16,
+                         container_version=5, route=route, router=router)
+    toks = encode(data)
+    t0 = time.perf_counter()
+    blob, _ = comp.compress(toks)
+    dt = time.perf_counter() - t0
+    assert np.array_equal(comp.decompress(blob), toks), \
+        "LOSSLESS VIOLATION"
+    return len(data) / len(blob), dt
+
+
+def run_bench(seg_bytes=4096):
+    pred = _TablePredictor()
+    fb = _fallback_codec()
+    segments = {
+        "llm_generated": _llm_generated(pred, seg_bytes),
+        "human_text": _human_like(seg_bytes),
+        "random_bytes": _random_bytes(seg_bytes),
+    }
+    # the mixed-traffic stream interleaves all three regimes — the shape
+    # the router exists for: no single strategy wins every chunk
+    segments["mixed_traffic"] = b"".join(
+        segments[k][i * seg_bytes // 4:(i + 1) * seg_bytes // 4]
+        for i in range(4) for k in ("llm_generated", "human_text",
+                                    "random_bytes"))
+    out = {"fallback_codec": fb, "segments": {}, "gate_pass": True}
+    for name, data in segments.items():
+        r_llm, t_llm = _ratio(pred, data, "llm")
+        r_fb, _ = _ratio(pred, data, fb)
+        r_auto, t_auto = _ratio(pred, data, "auto")
+        floor = max(r_llm, r_fb) * SLACK
+        ok = r_auto >= floor
+        out["segments"][name] = {
+            "llm": round(r_llm, 3), "fallback": round(r_fb, 3),
+            "routed": round(r_auto, 3), "floor": round(floor, 3),
+            "probe_overhead": round(t_auto / max(t_llm, 1e-9), 3),
+            "pass": ok,
+        }
+        out["gate_pass"] = out["gate_pass"] and ok
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small segments: correctness + gate shape only")
+    ap.add_argument("--bytes", type=int, default=0,
+                    help="override bytes per segment")
+    args = ap.parse_args()
+    n = args.bytes or (1024 if args.smoke else 8192)
+    res = run_bench(seg_bytes=n)
+    print(f"# router_bench: chunk={CHUNK} seg_bytes={n} "
+          f"fallback={res['fallback_codec']}")
+    print(f"{'segment':16s} {'llm':>7} {'fallback':>9} {'routed':>7} "
+          f"{'floor':>7} {'probe_ovh':>9}  gate")
+    rows = []
+    for name, s in res["segments"].items():
+        print(f"{name:16s} {s['llm']:>7.3f} {s['fallback']:>9.3f} "
+              f"{s['routed']:>7.3f} {s['floor']:>7.3f} "
+              f"{s['probe_overhead']:>8.2f}x  "
+              f"{'ok' if s['pass'] else 'FAIL'}")
+        rows.append(f"router_bench_{name},0.0,"
+                    f"llm={s['llm']};fb={s['fallback']};"
+                    f"routed={s['routed']};pass={s['pass']}")
+    print("\n# CSV (name,us_per_call,derived)")
+    for row in rows:
+        print(row)
+    if not res["gate_pass"]:
+        print("FAIL: routed ratio fell below max(llm, fallback) - 2% "
+              "on at least one segment", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

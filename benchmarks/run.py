@@ -363,10 +363,33 @@ def telemetry_overhead(quick=False):
     return res
 
 
+def router_routing(quick=False):
+    """DESIGN.md §11 gate: adaptive per-chunk codec routing loses at
+    most 2% to the better of pure-LLM / fallback-only on EVERY traffic
+    segment, and beats both on mixed traffic (where neither strategy
+    wins every chunk). All strategies measured as v5 containers, so
+    index overhead cancels. Full table + CLI gate live in
+    benchmarks/router_bench.py."""
+    from benchmarks.router_bench import run_bench
+    t0 = time.time()
+    res = run_bench(seg_bytes=1024 if quick else 8192)
+    print("\n== router_routing (v5 ratios per traffic segment) ==")
+    for name, s in res["segments"].items():
+        print(f"{name:16s} llm={s['llm']:.3f} fb={s['fallback']:.3f} "
+              f"routed={s['routed']:.3f} "
+              f"{'ok' if s['pass'] else 'FAIL'}")
+    mixed = res["segments"]["mixed_traffic"]
+    _csv("router_routing", (time.time() - t0) * 1e6 / len(res["segments"]),
+         f"mixed_routed={mixed['routed']};mixed_llm={mixed['llm']};"
+         f"mixed_fb={mixed['fallback']};pass={res['gate_pass']}")
+    (RESULTS / "router_routing.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
 ALL = [table2_information, table3_traditional, table5_main, fig_chunk_size,
        fig_model_size, fig_data_scale, fig9_human_vs_llm, fig8_domain_models,
        coder_throughput, service_throughput, decompress_throughput,
-       telemetry_overhead]
+       telemetry_overhead, router_routing]
 
 
 def main() -> None:

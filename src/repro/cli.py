@@ -2,7 +2,7 @@
 
     llmc compress   IN OUT [--codec rans|ac] [--chunk N] [--topk K]
                            [--slots B] [--predictor NAME] [--v3]
-                           [--sidecar]
+                           [--route auto|llm|zstd|lzma|raw] [--sidecar]
     llmc decompress IN OUT [--predictor NAME] [--sidecar]
     llmc range      IN OUT --chunks LO:HI [--predictor NAME]
     llmc info       IN
@@ -11,8 +11,12 @@
 
 ``compress``/``decompress`` route through the continuous-batching
 service (repro.service) and write/read v4 seekable containers by
-default; ``range`` random-access-decodes a chunk interval from a v4
-archive; ``info`` prints header + index without loading any model.
+default; ``--route auto`` turns on adaptive per-chunk codec routing
+(DESIGN.md §11) and writes a v5 mixed-codec container whose index
+records each chunk's codec tag — decode follows the recorded tags, it
+never guesses. ``range`` random-access-decodes a chunk interval from a
+v4+ archive (mixed-codec v5 included); ``info`` prints header + index
+(and, for v5, the per-chunk codec tags) without loading any model.
 
 ``stats`` (DESIGN.md §10) runs a small round-trip workload through a
 ``CompressionService`` and prints its telemetry snapshot — occupancy,
@@ -48,20 +52,29 @@ def _predictor(name: str):
 
 def _cmd_info(args) -> int:
     from repro.core import read_header, read_index
-    from repro.core.compressor import VERSION_V4
+    from repro.core.compressor import VERSION_V4, VERSION_V5
     blob = open(args.input, "rb").read()
     info = read_header(blob)
     print(f"{args.input}: LLMC v{info.version} codec={info.codec_name} "
           f"chunk_size={info.chunk_size} n_tokens={info.n_tokens} "
           f"n_chunks={info.n_chunks} vocab={info.vocab} topk={info.topk} "
           f"precision={info.precision} ({len(blob)} bytes)")
-    if info.version == VERSION_V4:
+    if info.version >= VERSION_V4:
         info = read_index(blob, info)
+        tagged = info.version >= VERSION_V5
+        cols = "offset, bytes, tokens, xxh64" + (", codec" if tagged else "")
         print(f"index: footer verified; encode_batch={info.encode_batch}; "
-              "per-chunk (offset, bytes, tokens, xxh64):")
+              f"per-chunk ({cols}):")
         for i, e in enumerate(info.entries):
+            tag = f"  {e.codec_name}" if tagged else ""
             print(f"  chunk {i:4d}: {e.offset:8d} {e.length:6d} "
-                  f"{e.n_tokens:5d} {e.checksum:016x}")
+                  f"{e.n_tokens:5d} {e.checksum:016x}{tag}")
+        if tagged:
+            counts = {}
+            for e in info.entries:
+                counts[e.codec_name] = counts.get(e.codec_name, 0) + 1
+            mix = "  ".join(f"{n}×{c}" for c, n in sorted(counts.items()))
+            print(f"codecs: {mix}" if mix else "codecs: (empty)")
     else:
         print("index: none (v2/v3 container — no random access)")
     return 0
@@ -73,7 +86,8 @@ def _service(args, pred):
     return CompressionService(pred, slots=args.slots, chunk_size=args.chunk,
                               topk=args.topk,
                               precision=getattr(args, "precision",
-                                                DEFAULT_PRECISION))
+                                                DEFAULT_PRECISION),
+                              route=getattr(args, "route", "llm"))
 
 
 def _cmd_compress(args) -> int:
@@ -86,6 +100,11 @@ def _cmd_compress(args) -> int:
     t0 = time.time()
     handle = None
     if args.codec == "ac" or args.v3:
+        if args.route != "llm":
+            # routing needs v5 codec tags; v3 can't carry them and the
+            # ac estimator path never routes — fail with a clear message
+            raise SystemExit("llmc: --route requires the default service "
+                             "path (rans codec, no --v3)")
         # legacy codec / wire-minimal container: grouped path
         comp = LLMCompressor(pred, chunk_size=args.chunk, topk=args.topk,
                              decode_batch=args.slots, codec=args.codec,
@@ -250,6 +269,13 @@ def main(argv=None) -> int:
     p.add_argument("--v3", action="store_true",
                    help="write the wire-minimal v3 container "
                         "(no index/checksums)")
+    p.add_argument("--route", choices=("llm", "auto", "zstd", "lzma", "raw"),
+                   default="llm",
+                   help="per-chunk codec routing (DESIGN.md §11): 'auto' "
+                        "probes model fit per chunk and writes a v5 "
+                        "mixed-codec container; a codec name forces that "
+                        "fallback for every chunk; 'llm' (default) keeps "
+                        "the pure entropy-coded v4 path")
     p.add_argument("--sidecar", action="store_true",
                    help="write per-chunk diagnostics (bits/token, "
                         "escapes) to OUT.diag.json")
@@ -264,7 +290,8 @@ def main(argv=None) -> int:
                    help="write per-chunk diagnostics to IN.diag.json")
     p.set_defaults(fn=_cmd_decompress)
 
-    p = sub.add_parser("range", help="random-access decode (v4 only)")
+    p = sub.add_parser("range", help="random-access decode (v4+ seekable "
+                                     "containers, mixed-codec v5 included)")
     common(p)
     p.add_argument("--chunks", required=True, metavar="LO:HI")
     p.set_defaults(fn=_cmd_range)

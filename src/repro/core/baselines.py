@@ -5,6 +5,16 @@ Entropy-based: Huffman, static (order-0) arithmetic coding, and an
 order-N context-model arithmetic coder (the adaptive flavour FSE/NNCP-lite
 occupy). All implemented here so every number in the paper's Table 3/5
 analog is produced by this repo.
+
+Beyond ratio reporting, this module is also the **fallback codec
+registry** of the adaptive router (DESIGN.md §11): real
+``compress_bytes``/``decompress_bytes`` paths for the codecs a v5
+container may select per chunk when the LLM path would lose — zstd,
+LZMA (raw LZMA2 stream: no xz framing, chunks are small), and raw
+store. The registry is keyed by the short names the container's codec-id
+table (core.compressor.CODEC_IDS) maps to; zstd availability is checked
+at call time so the optional-dependency path (``HAVE_ZSTD = False``)
+stays testable by monkeypatching.
 """
 from __future__ import annotations
 
@@ -117,6 +127,68 @@ def orderN_ac_ratio(data: bytes, order: int = 2, precision: int = 14) -> float:
         c[byte] += 32
         ctx = (ctx + bytes([byte]))[-order:]
     return len(data) / max(1, len(enc.finish()))
+
+
+# ------------------------------------------------- fallback byte codecs
+# Chunk-scale streams: LZMA uses a raw LZMA2 filter chain (the xz/alone
+# containers cost ~20-60 framing bytes, which swamps a 256-byte chunk);
+# both sides agree on the filter spec below, so no header is needed.
+_LZMA_FILTERS = [{"id": _lzma.FILTER_LZMA2, "preset": 9}]
+_ZSTD_LEVEL = 19
+
+
+def _zstd_compress(data: bytes) -> bytes:
+    if not HAVE_ZSTD:
+        raise RuntimeError(
+            "zstd codec requires the 'zstandard' package "
+            "(pip install zstandard)")
+    return _zstd.ZstdCompressor(level=_ZSTD_LEVEL).compress(data)
+
+
+def _zstd_decompress(blob: bytes) -> bytes:
+    if not HAVE_ZSTD:
+        raise RuntimeError(
+            "zstd codec requires the 'zstandard' package "
+            "(pip install zstandard)")
+    return _zstd.ZstdDecompressor().decompress(blob)
+
+
+def _lzma_compress(data: bytes) -> bytes:
+    return _lzma.compress(data, format=_lzma.FORMAT_RAW,
+                          filters=_LZMA_FILTERS)
+
+
+def _lzma_decompress(blob: bytes) -> bytes:
+    return _lzma.decompress(blob, format=_lzma.FORMAT_RAW,
+                            filters=_LZMA_FILTERS)
+
+
+#: name -> (compress_fn, decompress_fn). These are the router's fallback
+#: backends; the names are wire-stable (they map to container codec ids).
+BYTE_CODECS = {
+    "zstd": (_zstd_compress, _zstd_decompress),
+    "lzma": (_lzma_compress, _lzma_decompress),
+    "raw": (lambda data: bytes(data), lambda blob: bytes(blob)),
+}
+
+
+def available_byte_codecs() -> list[str]:
+    """Fallback codec names usable right now, best-ratio-first. Checked
+    at call time, not import time, so a monkeypatched ``HAVE_ZSTD``
+    (the optional-dep test path) is respected."""
+    return [n for n in BYTE_CODECS if n != "zstd" or HAVE_ZSTD]
+
+
+def compress_bytes(name: str, data: bytes) -> bytes:
+    """Compress ``data`` with the named fallback codec. Raises KeyError
+    on an unknown name and RuntimeError when zstd is requested without
+    the optional ``zstandard`` package."""
+    return BYTE_CODECS[name][0](data)
+
+
+def decompress_bytes(name: str, blob: bytes) -> bytes:
+    """Exact inverse of ``compress_bytes(name, ...)``."""
+    return BYTE_CODECS[name][1](blob)
 
 
 ALL_BASELINES = {

@@ -60,14 +60,29 @@ of chunk ranges (``decompress_range``) and out-of-order chunk completion
 from the service scheduler; the checksums turn silent corruption into
 ``ContainerError`` before the entropy coder runs on garbage.
 
+Version 5 (DESIGN.md §11) is v4 plus **adaptive codec routing**: each
+index entry carries a u8 codec tag —
+  u64 offset | u32 stream length | u32 valid tokens | u8 codec | u64 xxh64
+— end magic 'LC5F'. The header codec byte still names the container's
+LLM *entropy* codec (ac/rans); a per-chunk tag either repeats it (the
+chunk is LLM-coded) or names a fallback byte codec (zstd=2, lzma=3,
+raw=4 — core/baselines.py) the router chose because the model fit was
+poor. The tags live inside the hash-covered footer, so a flipped tag is
+detected like any other index corruption, and decode reconstructs each
+chunk with exactly the recorded backend — the router runs at encode
+only, never guesses at decode. LLM-tagged chunks are grouped at the
+recorded encode batch for decode; lanes are independent, so *which*
+chunks share a group is free while the lane count stays load-bearing.
+
 The codec, version and geometry used for decode come from the container,
 never from this object's configuration. Version compatibility: v2
-read-only (AC implied), v3 read/write, v4 read/write. A bare
+read-only (AC implied), v3/v4/v5 read/write. A bare
 ``LLMCompressor`` writes v3 — the wire-minimal format every ratio
 benchmark measures (the v4 index costs a fixed 24 B/chunk, which
 amortizes over production payloads but distorts micro-scale ratios);
 the service layer (repro.service) and the ``llmc`` CLI write v4, where
-seekability and integrity checking earn their bytes.
+seekability and integrity checking earn their bytes, and v5 whenever
+routing is enabled (``route != "llm"``).
 """
 from __future__ import annotations
 
@@ -84,22 +99,38 @@ from .cdf import (DEFAULT_PRECISION, build_topk_cdfs, full_cdf_jit,
                   topk_cdf_jit, topk_cdf_lookup_jit, topk_quantized_jit)
 from .checksum import xxh64
 from .draft import SuffixDraft
+from .router import (ROUTE_AUTO, ROUTE_LLM, CodecRouter, RouterConfig,
+                     route_chunks)
 
 MAGIC = b"LLMC"
 VERSION_V3 = 3
 VERSION_V4 = 4
-VERSION = VERSION_V4                 # newest supported container version
+VERSION_V5 = 5
+VERSION = VERSION_V5                 # newest supported container version
 _V2_HEADER = "<BBHIIHB"              # seed header (no codec byte)
-_V3_HEADER = "<BBHIIHBB"             # v3 and v4 share this header layout
+_V3_HEADER = "<BBHIIHBB"             # v3/v4/v5 share this header layout
 _V4_ENTRY = "<QIIQ"                  # offset, stream len, valid tokens, xxh64
 _V4_ENTRY_SIZE = struct.calcsize(_V4_ENTRY)
 _V4_END_MAGIC = b"LC4F"
+_V5_ENTRY = "<QIIBQ"                 # v4 entry + u8 per-chunk codec tag
+_V5_ENTRY_SIZE = struct.calcsize(_V5_ENTRY)
+_V5_END_MAGIC = b"LC5F"
 _V4_TRAILER = 12                     # u32 n_chunks | u32 footer_len | magic
 
+# LLM entropy codecs — legal in the header codec byte of any version
 CODEC_AC = 0
 CODEC_RANS = 1
+# fallback byte codecs — legal only in v5 per-chunk tags (the router's
+# choices; backends live in core/baselines.py)
+CODEC_ZSTD = 2
+CODEC_LZMA = 3
+CODEC_RAW = 4
 CODEC_IDS = {"ac": CODEC_AC, "rans": CODEC_RANS}
-CODEC_NAMES = {v: k for k, v in CODEC_IDS.items()}
+FALLBACK_CODEC_IDS = {"zstd": CODEC_ZSTD, "lzma": CODEC_LZMA,
+                      "raw": CODEC_RAW}
+CODEC_NAMES = {v: k for k, v in {**CODEC_IDS,
+                                 **FALLBACK_CODEC_IDS}.items()}
+LLM_CODECS = frozenset(CODEC_IDS.values())
 
 
 class ContainerError(ValueError):
@@ -164,11 +195,23 @@ def _read_varint(buf: bytes, pos: int, end: int | None = None) -> tuple[int, int
 # ---------------------------------------------------------------- container
 @dataclass
 class ChunkEntry:
-    """One v4 index-footer entry (also synthesized for v2/v3 at parse)."""
+    """One v4/v5 index-footer entry (also synthesized for v2/v3 at
+    parse). ``codec`` is the chunk's own codec id: the container's
+    entropy codec for every chunk of a v2-v4 archive, and the recorded
+    per-chunk routing decision for v5 (possibly a fallback codec)."""
     offset: int          # byte offset of the stream from container start
     length: int          # stream byte length
     n_tokens: int        # valid tokens in this chunk (<= chunk_size)
     checksum: int = 0    # xxh64 of the stream bytes (0 for v2/v3)
+    codec: int = -1      # per-chunk codec id (filled in at parse)
+
+    @property
+    def codec_name(self) -> str:
+        return CODEC_NAMES[self.codec]
+
+    @property
+    def is_llm(self) -> bool:
+        return self.codec in LLM_CODECS
 
 
 @dataclass
@@ -214,7 +257,7 @@ def read_header(blob: bytes) -> ContainerInfo:
     version = blob[4]
     if version == 2:
         hdr = _V2_HEADER
-    elif version in (VERSION_V3, VERSION_V4):
+    elif version in (VERSION_V3, VERSION_V4, VERSION_V5):
         hdr = _V3_HEADER
     else:
         raise ContainerError(f"unsupported container version {version}")
@@ -228,8 +271,12 @@ def read_header(blob: bytes) -> ContainerInfo:
         codec = CODEC_AC              # v2 archives predate the codec byte
     else:
         _, flags, C, n, vocab, topk, precision, codec = fields
-        if codec not in CODEC_NAMES:
-            raise ContainerError(f"unknown codec id {codec}")
+        # the header byte names the container's LLM *entropy* codec;
+        # fallback byte-codec ids (zstd/lzma/raw) are only legal in v5
+        # per-chunk tags, never here
+        if codec not in LLM_CODECS:
+            raise ContainerError(f"unknown codec id {codec} in header "
+                                 f"(entropy codec expected)")
     if C == 0:
         raise ContainerError("corrupt header: chunk_size is zero")
     # the *container's* codec decides which limits apply: a 24-bit-precision
@@ -248,22 +295,32 @@ def read_header(blob: bytes) -> ContainerInfo:
 
 
 def read_index(blob: bytes, info: ContainerInfo | None = None) -> ContainerInfo:
-    """Parse + verify the v4 index footer; returns info with ``entries``
-    populated. Verifies the footer checksum (which covers the header too)
-    but not the per-chunk stream checksums — those are checked by
-    ``parse_container``/``decompress_range`` for the chunks actually read."""
+    """Parse + verify the v4/v5 index footer; returns info with
+    ``entries`` populated. Verifies the footer checksum (which covers the
+    header too) but not the per-chunk stream checksums — those are checked
+    by ``parse_container``/``decompress_range`` for the chunks actually
+    read. v5 entries additionally carry the per-chunk codec tag, validated
+    here: a fallback id is fine, an LLM id must match the header's entropy
+    codec (a v5 archive never mixes rANS and AC chunks)."""
     info = info or read_header(blob)
-    if info.version != VERSION_V4:
+    if info.version == VERSION_V4:
+        entry_fmt, entry_size, end_magic = \
+            _V4_ENTRY, _V4_ENTRY_SIZE, _V4_END_MAGIC
+    elif info.version == VERSION_V5:
+        entry_fmt, entry_size, end_magic = \
+            _V5_ENTRY, _V5_ENTRY_SIZE, _V5_END_MAGIC
+    else:
         raise ContainerError(
             f"container version {info.version} has no index footer "
-            f"(random access requires v4)")
+            f"(random access requires v4+)")
     if len(blob) < info.header_size + _V4_TRAILER:
-        raise ContainerError("truncated container: missing v4 footer")
-    if blob[-4:] != _V4_END_MAGIC:
-        raise ContainerError("truncated or corrupt container: "
-                             "v4 end magic missing")
+        raise ContainerError("truncated container: missing index footer")
+    if blob[-4:] != end_magic:
+        raise ContainerError(
+            f"truncated or corrupt container: "
+            f"v{info.version} end magic missing")
     n_chunks_f, footer_len = struct.unpack("<II", blob[-12:-4])
-    expect_len = n_chunks_f * _V4_ENTRY_SIZE + 12
+    expect_len = n_chunks_f * entry_size + 12
     if footer_len != expect_len:
         raise ContainerError(
             f"corrupt footer: length field {footer_len} != {expect_len} "
@@ -275,7 +332,7 @@ def read_index(blob: bytes, info: ContainerInfo | None = None) -> ContainerInfo:
     footer_start = len(blob) - _V4_TRAILER - footer_len
     if footer_start < info.header_size:
         raise ContainerError("truncated container: footer overlaps header")
-    entries_end = footer_start + n_chunks_f * _V4_ENTRY_SIZE
+    entries_end = footer_start + n_chunks_f * entry_size
     (encode_batch,) = struct.unpack("<I", blob[entries_end:entries_end + 4])
     (footer_hash,) = struct.unpack("<Q",
                                    blob[entries_end + 4:entries_end + 12])
@@ -285,8 +342,20 @@ def read_index(blob: bytes, info: ContainerInfo | None = None) -> ContainerInfo:
                              "(header or index damaged)")
     entries = []
     for i in range(n_chunks_f):
-        off, ln, nt, cks = struct.unpack_from(_V4_ENTRY, blob,
-                                              footer_start + i * _V4_ENTRY_SIZE)
+        rec = struct.unpack_from(entry_fmt, blob,
+                                 footer_start + i * entry_size)
+        if info.version == VERSION_V4:
+            off, ln, nt, cks = rec
+            ctag = info.codec
+        else:
+            off, ln, nt, ctag, cks = rec
+            if ctag not in CODEC_NAMES:
+                raise ContainerError(
+                    f"corrupt index: chunk {i} has unknown codec id {ctag}")
+            if ctag in LLM_CODECS and ctag != info.codec:
+                raise ContainerError(
+                    f"corrupt index: chunk {i} tagged entropy codec {ctag} "
+                    f"but the container codec is {info.codec}")
         if nt > info.chunk_size:
             raise ContainerError(
                 f"corrupt index: chunk {i} claims {nt} tokens "
@@ -295,7 +364,7 @@ def read_index(blob: bytes, info: ContainerInfo | None = None) -> ContainerInfo:
             raise ContainerError(
                 f"corrupt index: chunk {i} stream [{off}, {off + ln}) "
                 f"outside body [{info.header_size}, {footer_start})")
-        entries.append(ChunkEntry(off, ln, nt, cks))
+        entries.append(ChunkEntry(off, ln, nt, cks, ctag))
     if sum(e.n_tokens for e in entries) != info.n_tokens:
         raise ContainerError(
             "corrupt container: index token counts disagree with header "
@@ -306,13 +375,17 @@ def read_index(blob: bytes, info: ContainerInfo | None = None) -> ContainerInfo:
 
 
 def parse_container(blob: bytes) -> tuple[ContainerInfo, list[bytes]]:
-    """Full parse: header (+ index when v4) + per-chunk streams, with all
-    integrity checks. Returns (info-with-entries, streams)."""
+    """Full parse: header (+ index when v4/v5) + per-chunk streams, with
+    all integrity checks. Returns (info-with-entries, streams). Every
+    entry's ``codec`` is populated regardless of version, so downstream
+    decode logic never special-cases the container version."""
     info = read_header(blob)
-    if info.version == VERSION_V4:
+    if info.version in (VERSION_V4, VERSION_V5):
         info = read_index(blob, info)
+        entry_size = _V4_ENTRY_SIZE if info.version == VERSION_V4 \
+            else _V5_ENTRY_SIZE
         body_end = len(blob) - _V4_TRAILER - \
-            (info.n_chunks * _V4_ENTRY_SIZE + 12)
+            (info.n_chunks * entry_size + 12)
     else:
         body_end = len(blob)
     pos = info.header_size
@@ -325,7 +398,7 @@ def parse_container(blob: bytes) -> tuple[ContainerInfo, list[bytes]]:
                 f"truncated container: chunk {i} claims {ln} bytes, "
                 f"{body_end - pos} remain")
         stream = blob[pos:pos + ln]
-        if info.version == VERSION_V4:
+        if info.version in (VERSION_V4, VERSION_V5):
             e = info.entries[i]
             if e.offset != pos or e.length != ln:
                 raise ContainerError(
@@ -335,7 +408,8 @@ def parse_container(blob: bytes) -> tuple[ContainerInfo, list[bytes]]:
                 raise ContainerError(
                     f"corrupt container: chunk {i} checksum mismatch")
         else:
-            info.entries.append(ChunkEntry(pos, ln, int(valid[i])))
+            info.entries.append(ChunkEntry(pos, ln, int(valid[i]),
+                                           codec=info.codec))
         streams.append(stream)
         pos += ln
     return info, streams
@@ -345,15 +419,35 @@ def write_container(streams: list[bytes], *, version: int, chunk_size: int,
                     n_tokens: int, vocab: int, topk: int, precision: int,
                     codec_id: int,
                     valid_lengths: np.ndarray | None = None,
-                    encode_batch: int = 0) -> bytes:
-    """Assemble a v3 or v4 container from per-chunk codec streams (in
+                    encode_batch: int = 0,
+                    codec_tags: list[int] | None = None) -> bytes:
+    """Assemble a v3/v4/v5 container from per-chunk codec streams (in
     chunk order — the service scheduler completes chunks out of order and
-    reorders before calling this). ``encode_batch`` (v4) records the
-    model-program lane count every chunk was encoded at (ragged groups
-    are dead-lane padded, never shrunk) — the batch shape a decoder must
-    use for bit-exact logits on non-batch-invariant models."""
-    if version not in (VERSION_V3, VERSION_V4):
+    reorders before calling this). ``encode_batch`` (v4+) records the
+    model-program lane count every LLM chunk was encoded at (ragged
+    groups are dead-lane padded, never shrunk) — the batch shape a
+    decoder must use for bit-exact logits on non-batch-invariant models.
+    ``codec_tags`` (v5) is the per-chunk codec id list the router chose;
+    it defaults to the container codec for every chunk. Passing a tag
+    that differs from ``codec_id`` in a v3/v4 write is an error — those
+    formats cannot represent it."""
+    if version not in (VERSION_V3, VERSION_V4, VERSION_V5):
         raise ValueError(f"cannot write container version {version}")
+    if codec_tags is not None:
+        if len(codec_tags) != len(streams):
+            raise ValueError(
+                f"{len(codec_tags)} codec tags for {len(streams)} streams")
+        if version != VERSION_V5 and any(t != codec_id for t in codec_tags):
+            raise ValueError(
+                f"per-chunk codec tags require a v5 container "
+                f"(got version {version})")
+        for t in codec_tags:
+            if t not in CODEC_NAMES:
+                raise ValueError(f"unknown codec id {t} in codec_tags")
+            if t in LLM_CODECS and t != codec_id:
+                raise ValueError(
+                    f"chunk tagged entropy codec {t} but the container "
+                    f"codec is {codec_id}")
     flags = 1 if topk else 0
     out = bytearray()
     out += MAGIC
@@ -362,21 +456,25 @@ def write_container(streams: list[bytes], *, version: int, chunk_size: int,
     header = bytes(out)
     if valid_lengths is None:
         valid_lengths = chunk_valid_lengths(n_tokens, chunk_size)
-    v4 = version == VERSION_V4
+    indexed = version in (VERSION_V4, VERSION_V5)
     entries = bytearray()
-    for s, nv in zip(streams, valid_lengths):
+    for i, (s, nv) in enumerate(zip(streams, valid_lengths)):
         _write_varint(out, len(s))
-        if v4:      # v3 skips the index — and the per-stream hashing
+        if version == VERSION_V4:   # v3 skips the index + per-stream hash
             entries += struct.pack(_V4_ENTRY, len(out), len(s), int(nv),
                                    xxh64(s))
+        elif version == VERSION_V5:
+            tag = codec_id if codec_tags is None else codec_tags[i]
+            entries += struct.pack(_V5_ENTRY, len(out), len(s), int(nv),
+                                   tag, xxh64(s))
         out += s
-    if v4:
+    if indexed:
         tail = bytes(entries) + struct.pack("<I", encode_batch)
         footer_hash = xxh64(header + tail)
         out += tail
         out += struct.pack("<Q", footer_hash)
         out += struct.pack("<II", len(streams), len(tail) + 8)
-        out += _V4_END_MAGIC
+        out += _V4_END_MAGIC if version == VERSION_V4 else _V5_END_MAGIC
     return bytes(out)
 
 
@@ -406,6 +504,9 @@ class CompressionStats:
     # signal the ROADMAP's adaptive codec router consumes: bits/token and
     # escape rate per chunk, previously computed and thrown away.
     chunks: list = field(default_factory=list)
+    # per-chunk router.RouteDecision records (routed compressors only) —
+    # the encode-side story of every codec tag written to the v5 index.
+    routes: list = field(default_factory=list)
 
     @property
     def total_bytes(self) -> int:
@@ -421,7 +522,9 @@ class LLMCompressor:
                  precision: int = DEFAULT_PRECISION,
                  decode_batch: int = 64,
                  codec: str = "rans",
-                 container_version: int = VERSION_V3,
+                 container_version: int | None = None,
+                 route: str = ROUTE_LLM,
+                 router: CodecRouter | RouterConfig | None = None,
                  draft_k: int = 0,
                  draft=None,
                  registry: obs.MetricsRegistry | None = None):
@@ -430,9 +533,32 @@ class LLMCompressor:
         if codec not in CODEC_IDS:
             raise ValueError(f"unknown codec {codec!r} "
                              f"(choose from {sorted(CODEC_IDS)})")
-        if container_version not in (VERSION_V3, VERSION_V4):
+        if route not in (ROUTE_LLM, ROUTE_AUTO) \
+                and route not in FALLBACK_CODEC_IDS:
+            raise ValueError(
+                f"unknown route {route!r} (choose 'llm', 'auto', or a "
+                f"fallback codec from {sorted(FALLBACK_CODEC_IDS)})")
+        # routing needs per-chunk codec tags, which only v5 carries; a
+        # pure-LLM compressor defaults to the wire-minimal v3 as before
+        if container_version is None:
+            container_version = VERSION_V3 if route == ROUTE_LLM \
+                else VERSION_V5
+        if container_version not in (VERSION_V3, VERSION_V4, VERSION_V5):
             raise ValueError(f"cannot write container version "
                              f"{container_version} (v2 is read-only)")
+        if route != ROUTE_LLM and container_version != VERSION_V5:
+            raise ValueError(
+                f"route={route!r} requires a v5 container (per-chunk codec "
+                f"tags); cannot write v{container_version}")
+        self.route = route
+        if isinstance(router, CodecRouter):
+            self.router = router
+        elif isinstance(router, RouterConfig):
+            self.router = CodecRouter(router)
+        elif route in FALLBACK_CODEC_IDS:
+            self.router = CodecRouter(RouterConfig(fallbacks=(route,)))
+        else:
+            self.router = CodecRouter()
         self.predictor = predictor
         self.chunk_size = int(chunk_size)
         self.topk = int(topk)
@@ -476,6 +602,18 @@ class LLMCompressor:
             "decompress.tokens", "tokens entropy-decoded")
         self._c_dec_escapes = self._registry.counter(
             "decompress.escapes", "escape symbols hit while decoding")
+        # router decision counters (canonical names: obs.metrics.ROUTER_*)
+        self._c_route_llm = self._registry.counter(
+            obs.ROUTER_CHUNKS_LLM, "chunks routed to the LLM entropy path")
+        self._c_route_fb = self._registry.counter(
+            obs.ROUTER_CHUNKS_FALLBACK,
+            "chunks routed to a fallback byte codec")
+        self._c_route_skips = self._registry.counter(
+            obs.ROUTER_PROBE_SKIPS,
+            "chunks that skipped LLM encode on the probe estimate")
+        self._c_route_flips = self._registry.counter(
+            obs.ROUTER_FLIPS,
+            "chunks where LLM encode ran but the fallback stream won")
 
     # ------------------------------------------------------------- compress
     def compress(self, tokens: np.ndarray, *,
@@ -490,6 +628,18 @@ class LLMCompressor:
         differences between the prefill and decode programs can flip a
         quantization bucket on rare tokens, so it is reserved for ratio
         estimation / benchmarking (see DESIGN.md §6).
+
+        With ``route != "llm"`` (DESIGN.md §11) each chunk is first
+        offered to the router: the realized best-fallback stream is
+        always built, a cheap prefill probe estimates the LLM code
+        length, chunks the probe rejects skip the model entirely, and
+        every chunk that *was* LLM-encoded still flips to its fallback if
+        the fallback stream turned out smaller — so the routed container
+        is per-chunk min(LLM, best fallback) and decode follows the
+        recorded tags. Only the LLM subset enters the model batch; the
+        recorded encode lane count covers exactly those chunks (lane
+        *composition* is free — lanes are independent — so later flips
+        don't invalidate it).
         """
         tokens = np.asarray(tokens, dtype=np.int32).ravel()
         n = tokens.size
@@ -498,19 +648,29 @@ class LLMCompressor:
         padded = np.zeros(n_chunks * C, dtype=np.int32)
         padded[:n] = tokens
         chunks = padded.reshape(n_chunks, C)
+        valid_all = chunk_valid_lengths(n, C)
 
         stats = CompressionStats(n_tokens=n)
-        streams: list[bytes] = []
+        streams: list = [b""] * n_chunks
+        tags = [CODEC_IDS[self.codec]] * n_chunks
+        if self.route == ROUTE_LLM:
+            decisions = fb = None
+            llm_idx = list(range(n_chunks))
+        else:
+            decisions, fb = self._route_chunks(chunks, valid_all)
+            llm_idx = [i for i, d in enumerate(decisions)
+                       if d.codec == self.codec]
         # The model program runs at ONE lane count for the whole archive:
         # batch shape is coding geometry (XLA reduction order varies with
         # B), so a ragged tail group is padded with dead lanes rather than
-        # shrinking the program — and the count recorded in the v4 footer
-        # is therefore exactly what every chunk was encoded at.
-        B = min(self.decode_batch, n_chunks)
+        # shrinking the program — and the count recorded in the v4+ footer
+        # is therefore exactly what every LLM chunk was encoded at.
+        B = min(self.decode_batch, len(llm_idx))
         with obs.span("compress.job", self._registry):
-            for i in range(0, n_chunks, max(1, B)):
-                batch = chunks[i:i + B]
-                nb = batch.shape[0]
+            for g in range(0, len(llm_idx), max(1, B)):
+                sel = llm_idx[g:g + B]
+                batch = chunks[sel]
+                nb = len(sel)
                 if nb < B:
                     batch = np.concatenate(
                         [batch, np.zeros((B - nb, C), np.int32)])
@@ -519,8 +679,13 @@ class LLMCompressor:
                         logits = self._score_incremental(batch)
                 else:
                     logits = np.asarray(self.predictor.score_chunks(batch))
-                streams.extend(self._encode_batch(batch[:nb], logits[:nb],
-                                                  i, n, stats))
+                enc = self._encode_batch(batch[:nb], logits[:nb],
+                                         valid_all[sel], sel, stats)
+                for k, j in enumerate(sel):
+                    streams[j] = enc[k]
+        if decisions is not None:
+            self._apply_routes(decisions, fb, streams, tags, valid_all,
+                               stats)
         self._c_cmp_tokens.inc(n)
         self._c_cmp_escapes.inc(stats.n_escapes)
         self._registry.counter("compress.chunks").inc(n_chunks)
@@ -528,10 +693,61 @@ class LLMCompressor:
             streams, version=self.container_version, chunk_size=C,
             n_tokens=n, vocab=self.predictor.vocab_size, topk=self.topk,
             precision=self.precision, codec_id=CODEC_IDS[self.codec],
-            encode_batch=B)
+            encode_batch=B,
+            codec_tags=tags if self.container_version == VERSION_V5
+            else None)
         stats.payload_bytes = sum(len(s) for s in streams)
         stats.header_bytes = len(blob) - stats.payload_bytes
         return blob, stats
+
+    # -------------------------------------------------------------- routing
+    def _route_chunks(self, chunks, valid_all):
+        """Route decisions + realized fallback streams for every chunk.
+        Forced-fallback routes (``route="zstd"`` etc.) skip the probe:
+        every chunk goes to its best fallback. ``route="auto"`` runs one
+        prefill probe over the first ``probe_tokens`` positions of all
+        chunks and keeps the LLM path unless it is projected to lose by
+        more than the safety margin."""
+        with obs.span("compress.route", self._registry):
+            return route_chunks(self.router, self.predictor, chunks,
+                                valid_all, self.codec,
+                                auto=self.route == ROUTE_AUTO)
+
+    def _apply_routes(self, decisions, fb, streams, tags, valid_all,
+                      stats) -> None:
+        """Post-encode routing resolution: install fallback streams for
+        probe-skipped / forced chunks, and flip any LLM-encoded chunk
+        whose realized fallback stream is strictly smaller. Updates
+        streams/tags in place and finalizes per-chunk diagnostics."""
+        tel = self._registry.enabled
+        by_idx = {d.chunk_index: d for d in stats.chunks}
+        for i, d in enumerate(decisions):
+            name, s = fb[i]
+            if d.codec != self.codec:       # LLM encode never ran
+                streams[i] = s
+                tags[i] = FALLBACK_CODEC_IDS[name]
+                self._c_route_fb.inc()
+                if d.llm_bits_est >= 0:     # auto probe said skip
+                    self._c_route_skips.inc()
+                if tel:
+                    stats.chunks.append(obs.ChunkDiagnostics(
+                        chunk_index=i, n_tokens=int(valid_all[i]),
+                        stream_bytes=len(s), coded_bits=8.0 * len(s),
+                        codec=name))
+            elif len(s) < len(streams[i]):  # LLM ran and lost: flip
+                d.codec, d.flipped = name, True
+                streams[i] = s
+                tags[i] = FALLBACK_CODEC_IDS[name]
+                self._c_route_fb.inc()
+                self._c_route_flips.inc()
+                if tel and i in by_idx:
+                    dg = by_idx[i]
+                    dg.codec, dg.stream_bytes = name, len(s)
+                    dg.coded_bits = 8.0 * len(s)
+            else:
+                self._c_route_llm.inc()
+        stats.routes = decisions
+        stats.chunks.sort(key=lambda c: c.chunk_index)
 
     def _score_incremental(self, batch: np.ndarray) -> np.ndarray:
         """Teacher-forced scoring through the decode program: one call to
@@ -550,39 +766,38 @@ class LLMCompressor:
         return logits
 
     # -------------------------------------------------------------- encode
-    def _valid_lengths(self, B, chunk_offset, n_total) -> np.ndarray:
-        lens = chunk_valid_lengths(n_total, self.chunk_size)
-        return lens[chunk_offset:chunk_offset + B]
-
-    def _encode_batch(self, batch, logits, chunk_offset, n_total, stats):
-        ideal_rows = self._accumulate_ideal_bits(batch, logits,
-                                                 chunk_offset, n_total,
+    def _encode_batch(self, batch, logits, valid, chunk_indices, stats):
+        """Entropy-encode one (nb, C) batch. ``valid`` is the per-row
+        valid-token count and ``chunk_indices`` the rows' absolute chunk
+        ids (the routed path encodes a non-contiguous LLM subset, so
+        neither is derivable from an offset anymore)."""
+        valid = np.asarray(valid, np.int64)
+        ideal_rows = self._accumulate_ideal_bits(batch, logits, valid,
                                                  stats)
         if self.codec == "rans":
             streams, bits_rows, esc_rows = self._encode_batch_rans(
-                batch, logits, chunk_offset, n_total, stats)
+                batch, logits, valid, stats)
         else:
             streams, bits_rows, esc_rows = self._encode_batch_ac(
-                batch, logits, chunk_offset, n_total, stats)
+                batch, logits, valid, stats)
         if self._registry.enabled:
-            valid = self._valid_lengths(batch.shape[0], chunk_offset,
-                                        n_total)
             h = self._registry.histogram(
                 "chunk.bits_per_token",
                 "realized payload bits/token per chunk")
             for b, s in enumerate(streams):
                 d = obs.ChunkDiagnostics(
-                    chunk_index=chunk_offset + b, n_tokens=int(valid[b]),
+                    chunk_index=int(chunk_indices[b]),
+                    n_tokens=int(valid[b]),
                     stream_bytes=len(s),
                     coded_bits=float(bits_rows[b]),
                     ideal_bits=float(ideal_rows[b]),
-                    n_escapes=int(esc_rows[b]))
+                    n_escapes=int(esc_rows[b]),
+                    codec=self.codec)
                 stats.chunks.append(d)
                 h.observe(d.bits_per_token)
         return streams
 
-    def _accumulate_ideal_bits(self, batch, logits, chunk_offset, n_total,
-                               stats):
+    def _accumulate_ideal_bits(self, batch, logits, valid, stats):
         """Accumulate the un-quantized model cross-entropy into ``stats``;
         returns the per-chunk row sums (bits) for diagnostics."""
         lp = logits.astype(np.float64)
@@ -590,19 +805,16 @@ class LLMCompressor:
         lse = np.log(np.exp(lp).sum(axis=-1))
         tok_lp = np.take_along_axis(lp, batch[..., None].astype(np.int64),
                                     axis=-1)[..., 0]
-        valid = self._valid_lengths(batch.shape[0], chunk_offset, n_total)
         m = np.arange(batch.shape[1])[None, :] < valid[:, None]
         rows = ((lse - tok_lp) * m).sum(axis=1) / np.log(2.0)
         stats.ideal_bits += float(rows.sum())
         return rows
 
-    def _encode_batch_rans(self, batch, logits, chunk_offset, n_total,
-                           stats):
+    def _encode_batch_rans(self, batch, logits, valid, stats):
         """All B chunk-streams advance through one vectorized coder step
         per token position: vectorized top-K slot lookup, masked escape
         steps, and a single LIFO flush in finish()."""
         B, C = batch.shape
-        valid = self._valid_lengths(B, chunk_offset, n_total)
         enc = rans.BatchedRansEncoder(B)
         pos = np.arange(C)[None, :] < valid[:, None]          # (B, C) active
         tel = self._registry.enabled
@@ -654,14 +866,13 @@ class LLMCompressor:
                     bits_rows += (self.precision - np.log2(fr)) * m
         return enc.finish(), bits_rows, esc_rows
 
-    def _encode_batch_ac(self, batch, logits, chunk_offset, n_total, stats):
+    def _encode_batch_ac(self, batch, logits, valid, stats):
         """Legacy per-stream arithmetic-coding loops (reference codec)."""
         V = self.predictor.vocab_size
         streams = []
         if self.topk:
             ids, qpmf = topk_quantized_jit(logits, self.topk, self.precision)
             ids, cdfs = build_topk_cdfs(ids, qpmf)
-        valid = self._valid_lengths(batch.shape[0], chunk_offset, n_total)
         esc_rows = np.zeros(batch.shape[0], np.int64)
         for b in range(batch.shape[0]):
             enc = ac.ArithmeticEncoder()
@@ -695,10 +906,12 @@ class LLMCompressor:
         self._check_config(info)
         if info.n_chunks == 0:           # valid empty container
             return np.zeros(0, np.int32)
+        if any(not e.is_llm for e in info.entries):
+            return self._decompress_mixed(info, streams)
         valid = np.array([e.n_tokens for e in info.entries], np.int64)
         C = self.chunk_size
         out = np.zeros(info.n_chunks * C, dtype=np.int32)
-        # decode at the encoder's recorded lane count (v4); v2/v3 record
+        # decode at the encoder's recorded lane count (v4+); v2/v3 record
         # nothing, so decode_batch must match the encoder's — mirror its
         # min() and dead-lane padding either way
         B = info.encode_batch or min(self.decode_batch, info.n_chunks)
@@ -715,6 +928,55 @@ class LLMCompressor:
                 out[i * C:(i + ng) * C] = dec_tokens[:ng].ravel()
         self._c_dec_tokens.inc(info.n_tokens)
         self._registry.counter("decompress.chunks").inc(info.n_chunks)
+        return out[:info.n_tokens]
+
+    def _decode_fallback_entry(self, idx: int, entry: ChunkEntry,
+                               stream: bytes, vocab: int) -> np.ndarray:
+        """Decode one fallback-tagged chunk stream; structural problems
+        become ContainerError (the stream passed its checksum, so any
+        failure here means a crafted/mis-tagged container)."""
+        try:
+            return CodecRouter.decode_fallback(entry.codec_name, stream,
+                                               entry.n_tokens, vocab)
+        except ValueError as e:
+            raise ContainerError(f"corrupt container: chunk {idx}: {e}")
+
+    def _decompress_mixed(self, info: ContainerInfo,
+                          streams: list) -> np.ndarray:
+        """v5 mixed-codec decode: fallback-tagged chunks decode directly
+        on the host; the surviving LLM-tagged chunks are grouped at the
+        recorded encode lane count, in tag order. Encode-time group
+        *composition* is not (and cannot be) reconstructed — post-encode
+        flips changed it — but lanes are independent, so only the lane
+        count is coding geometry (DESIGN.md §8)."""
+        C = self.chunk_size
+        out = np.zeros(info.n_chunks * C, dtype=np.int32)
+        llm_idx = [i for i, e in enumerate(info.entries) if e.is_llm]
+        with obs.span("decompress.job", self._registry):
+            for i, e in enumerate(info.entries):
+                if e.is_llm:
+                    continue
+                toks = self._decode_fallback_entry(i, e, streams[i],
+                                                   info.vocab)
+                out[i * C:i * C + e.n_tokens] = toks
+            B = info.encode_batch or min(self.decode_batch,
+                                         max(1, len(llm_idx)))
+            for g in range(0, len(llm_idx), B):
+                sel = llm_idx[g:g + B]
+                group = [streams[j] for j in sel] + [b""] * (B - len(sel))
+                v = np.zeros(B, np.int64)
+                v[:len(sel)] = [info.entries[j].n_tokens for j in sel]
+                toks = self._decode_group(group, v, info.codec,
+                                          chunk_offset=sel[0])
+                for k, j in enumerate(sel):
+                    nt = info.entries[j].n_tokens
+                    out[j * C:j * C + nt] = toks[k, :nt]
+        self._c_dec_tokens.inc(info.n_tokens)
+        self._registry.counter("decompress.chunks").inc(info.n_chunks)
+        self._registry.counter(
+            "decompress.fallback_chunks",
+            "fallback-tagged chunks decoded without the model").inc(
+            info.n_chunks - len(llm_idx))
         return out[:info.n_tokens]
 
     def decompress_range(self, blob: bytes, chunk_start: int,
@@ -749,6 +1011,9 @@ class LLMCompressor:
         B = info.encode_batch or min(self.decode_batch, info.n_chunks)
         C = self.chunk_size
         out = np.zeros((chunk_stop - chunk_start) * C, dtype=np.int32)
+        if any(not e.is_llm for e in info.entries):
+            return self._range_mixed(blob, info, chunk_start, chunk_stop,
+                                     B, out)
         total = 0
         for g in range(chunk_start // B, (chunk_stop - 1) // B + 1):
             g_lo = g * B
@@ -770,6 +1035,41 @@ class LLMCompressor:
                 b = j - g_lo
                 out[total:total + int(v[b])] = toks[b, :int(v[b])]
                 total += int(v[b])
+        return out[:total]
+
+    def _range_mixed(self, blob, info: ContainerInfo, chunk_start: int,
+                     chunk_stop: int, B: int, out: np.ndarray) -> np.ndarray:
+        """Range decode over a mixed-codec v5 container: fallback-tagged
+        chunks decode individually, the requested LLM-tagged chunks are
+        grouped at the recorded lane count (composition is free — see
+        ``_decompress_mixed``)."""
+        toks_by_chunk: dict[int, np.ndarray] = {}
+        llm_sel: list[tuple[int, bytes]] = []
+        for j in range(chunk_start, chunk_stop):
+            e = info.entries[j]
+            s = blob[e.offset:e.offset + e.length]
+            if xxh64(s) != e.checksum:
+                raise ContainerError(
+                    f"corrupt container: chunk {j} checksum mismatch")
+            if e.is_llm:
+                llm_sel.append((j, s))
+            else:
+                toks_by_chunk[j] = self._decode_fallback_entry(
+                    j, e, s, info.vocab)
+        for g in range(0, len(llm_sel), B):
+            grp = llm_sel[g:g + B]
+            group = [s for _, s in grp] + [b""] * (B - len(grp))
+            v = np.zeros(B, np.int64)
+            v[:len(grp)] = [info.entries[j].n_tokens for j, _ in grp]
+            toks = self._decode_group(group, v, info.codec,
+                                      chunk_offset=grp[0][0])
+            for k, (j, _) in enumerate(grp):
+                toks_by_chunk[j] = toks[k, :info.entries[j].n_tokens]
+        total = 0
+        for j in range(chunk_start, chunk_stop):
+            t = toks_by_chunk[j]
+            out[total:total + t.size] = t
+            total += t.size
         return out[:total]
 
     # Decode groups take explicit per-stream valid lengths (slot-resumable

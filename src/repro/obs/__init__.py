@@ -33,6 +33,10 @@ from .logs import (  # noqa: F401
     log_exception,
 )
 from .metrics import (  # noqa: F401
+    ROUTER_CHUNKS_FALLBACK,
+    ROUTER_CHUNKS_LLM,
+    ROUTER_FLIPS,
+    ROUTER_PROBE_SKIPS,
     Counter,
     Gauge,
     Histogram,
@@ -44,6 +48,10 @@ from .trace import span  # noqa: F401
 
 __all__ = [
     "ChunkDiagnostics",
+    "ROUTER_CHUNKS_FALLBACK",
+    "ROUTER_CHUNKS_LLM",
+    "ROUTER_FLIPS",
+    "ROUTER_PROBE_SKIPS",
     "Counter",
     "Gauge",
     "Histogram",

@@ -43,6 +43,7 @@ class ChunkDiagnostics:
     draft_rounds: int = 0        # speculative decode only
     draft_accepted: int = 0      # drafted tokens accepted (bonus yield)
     rollbacks: int = 0
+    codec: str = ""              # per-chunk codec name (v5 routing)
 
     @property
     def bits_per_token(self) -> float:

@@ -42,6 +42,15 @@ _EXP_LO = -31            # smallest bucket exponent (le = 2**-31 ≈ 4.7e-10)
 _EXP_HI = 32             # largest  bucket exponent (le = 2**32)
 _NBUCKETS = _EXP_HI - _EXP_LO + 2   # + zero bucket + overflow-into-last
 
+# Canonical router-decision counter names (DESIGN.md §11). Defined here —
+# not in core/ — so the compressor, the service scheduler, and dashboards
+# all key the same strings; drift between producers would silently split
+# one decision stream across two metric names.
+ROUTER_CHUNKS_LLM = "router.chunks_llm"
+ROUTER_CHUNKS_FALLBACK = "router.chunks_fallback"
+ROUTER_PROBE_SKIPS = "router.probe_skips"
+ROUTER_FLIPS = "router.flips"
+
 
 class Counter:
     """Monotonic counter. ``value`` is plain read/write on purpose: the

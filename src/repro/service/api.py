@@ -8,10 +8,20 @@ scheduler until that job completes — submit many handles first, then
 await them in any order, and all jobs share every model step.
 
 Containers: writes v4 (seekable index footer + xxh64 checksums; the
-out-of-order chunk completion of the scheduler needs the index anyway).
-Reads v2/v3/v4; legacy AC-codec containers (and all v2 archives) cannot
+out-of-order chunk completion of the scheduler needs the index anyway),
+or v5 when adaptive routing is on (``route != "llm"`` — per-chunk codec
+tags, DESIGN.md §11). Routing happens at submit: every chunk's realized
+best-fallback stream is built up front, the probe marks poorly-modelled
+chunks, and those complete *immediately* — they never occupy a model
+slot, so unpredictable traffic stops costing model steps. Chunks that do
+enter the batch still flip to their fallback at completion if the
+fallback stream turned out smaller (``SlotScheduler._finish_slot``).
+
+Reads v2–v5; legacy AC-codec containers (and all v2 archives) cannot
 ride the interleaved-rANS slot machine, so they are decoded eagerly at
 submit time through the grouped path — same result, no await needed.
+Fallback-tagged v5 chunks similarly decode eagerly at submit (they need
+no model); only the LLM-tagged chunks are queued.
 AC archives above the rANS precision cap can't construct a matching
 service at all (the cap guards the service's own rANS coding) — decode
 those through ``LLMCompressor`` directly, as the ``llmc`` CLI does.
@@ -20,12 +30,18 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.core import rans
 from repro.core.cdf import DEFAULT_PRECISION
-from repro.core.compressor import (CODEC_AC, CODEC_RANS, VERSION_V4,
-                                   CompressionStats, ContainerError,
-                                   LLMCompressor, check_container_config,
-                                   parse_container, write_container)
+from repro.core.compressor import (CODEC_AC, CODEC_RANS,
+                                   FALLBACK_CODEC_IDS, VERSION_V4,
+                                   VERSION_V5, CompressionStats,
+                                   ContainerError, LLMCompressor,
+                                   check_container_config,
+                                   chunk_valid_lengths, parse_container,
+                                   write_container)
+from repro.core.router import (ROUTE_AUTO, ROUTE_LLM, CodecRouter,
+                               RouterConfig, route_chunks)
 from repro.obs import MetricsRegistry
 from .scheduler import SlotScheduler
 from .session import COMPRESS, DECOMPRESS, ChunkTask, Job, JobHandle
@@ -66,7 +82,9 @@ class CompressionService:
 
     def __init__(self, predictor, *, slots: int = 8, chunk_size: int = 256,
                  topk: int = 0, precision: int = DEFAULT_PRECISION,
-                 container_version: int = VERSION_V4,
+                 container_version: int | None = None,
+                 route: str = ROUTE_LLM,
+                 router: CodecRouter | RouterConfig | None = None,
                  registry: MetricsRegistry | None = None):
         if topk and topk >= predictor.vocab_size:
             topk = 0
@@ -75,6 +93,27 @@ class CompressionService:
         if precision > rans.MAX_PRECISION:
             raise ValueError(f"precision {precision} exceeds rANS coder "
                              f"limit {rans.MAX_PRECISION}")
+        if route not in (ROUTE_LLM, ROUTE_AUTO) \
+                and route not in FALLBACK_CODEC_IDS:
+            raise ValueError(
+                f"unknown route {route!r} (choose 'llm', 'auto', or a "
+                f"fallback codec from {sorted(FALLBACK_CODEC_IDS)})")
+        if container_version is None:
+            container_version = VERSION_V4 if route == ROUTE_LLM \
+                else VERSION_V5
+        if route != ROUTE_LLM and container_version != VERSION_V5:
+            raise ValueError(
+                f"route={route!r} requires a v5 container (per-chunk codec "
+                f"tags); cannot write v{container_version}")
+        self.route = route
+        if isinstance(router, CodecRouter):
+            self.router = router
+        elif isinstance(router, RouterConfig):
+            self.router = CodecRouter(router)
+        elif route in FALLBACK_CODEC_IDS:
+            self.router = CodecRouter(RouterConfig(fallbacks=(route,)))
+        else:
+            self.router = CodecRouter()
         self.predictor = predictor
         self.slots = int(slots)
         self.chunk_size = int(chunk_size)
@@ -97,18 +136,36 @@ class CompressionService:
 
     # ------------------------------------------------------------- submit
     def submit_compress(self, tokens, *, priority: int = 0) -> JobHandle:
-        """Queue a token stream for compression into a v4 container."""
+        """Queue a token stream for compression into a v4 container
+        (v5 with per-chunk codec tags when routing is enabled)."""
         tokens = np.asarray(tokens, np.int32).ravel()
         n = int(tokens.size)
         C = self.chunk_size
         n_chunks = -(-n // C)            # 0 tokens => 0 chunks
 
+        decisions = fb = None
+        if self.route != ROUTE_LLM and n_chunks:
+            padded = np.zeros(n_chunks * C, np.int32)
+            padded[:n] = tokens
+            decisions, fb = route_chunks(
+                self.router, self.predictor, padded.reshape(n_chunks, C),
+                chunk_valid_lengths(n, C), "rans",
+                auto=self.route == ROUTE_AUTO)
+
         def assemble(streams: list[bytes]):
+            tags = None
+            if self.container_version == VERSION_V5:
+                # late-bound through the job: fallback codec names were
+                # recorded per chunk as completions arrived
+                tags = [FALLBACK_CODEC_IDS.get(job._codecs.get(i),
+                                               CODEC_RANS)
+                        for i in range(n_chunks)]
             blob = write_container(
                 streams, version=self.container_version, chunk_size=C,
                 n_tokens=n, vocab=self.predictor.vocab_size,
                 topk=self.topk, precision=self.precision,
-                codec_id=CODEC_RANS, encode_batch=self.slots)
+                codec_id=CODEC_RANS, encode_batch=self.slots,
+                codec_tags=tags)
             payload = sum(len(s) for s in streams)
             return blob, CompressionStats(
                 n_tokens=n, payload_bytes=payload,
@@ -125,10 +182,26 @@ class CompressionService:
             return JobHandle(job, self)
         for i in range(n_chunks):
             lo, hi = i * C, min((i + 1) * C, n)
-            self.scheduler.submit(
-                ChunkTask(job, i, COMPRESS, max(0, hi - lo),
-                          tokens=tokens[lo:hi]),
-                priority)
+            valid = max(0, hi - lo)
+            if decisions is not None and decisions[i].codec != "rans":
+                # the probe (or a forced route) diverted this chunk: it
+                # completes right now and never takes a model slot
+                name, stream = fb[i]
+                self.registry.counter(obs.ROUTER_CHUNKS_FALLBACK).inc()
+                if decisions[i].llm_bits_est >= 0:
+                    self.registry.counter(obs.ROUTER_PROBE_SKIPS).inc()
+                diag = None
+                if self.registry.enabled:
+                    diag = obs.ChunkDiagnostics(
+                        chunk_index=i, n_tokens=valid,
+                        stream_bytes=len(stream),
+                        coded_bits=8.0 * len(stream), codec=name)
+                job._chunk_done(i, stream, diag, codec=name)
+                continue
+            task = ChunkTask(job, i, COMPRESS, valid, tokens=tokens[lo:hi])
+            if decisions is not None:
+                task.fallback, task.fallback_codec = fb[i][1], fb[i][0]
+            self.scheduler.submit(task, priority)
         return JobHandle(job, self)
 
     def submit_decompress(self, blob: bytes, *, priority: int = 0) -> JobHandle:
@@ -144,10 +217,23 @@ class CompressionService:
             # reject before anything is queued, so a corrupt container
             # cannot leave a partial job's chunks orphaned in the queue
             for i, (s, e) in enumerate(zip(streams, info.entries)):
-                if e.n_tokens > 0 and len(s) < rans._STATE_BYTES:
+                if e.is_llm and e.n_tokens > 0 \
+                        and len(s) < rans._STATE_BYTES:
                     raise ContainerError(
                         f"chunk {i}: stream of {len(s)} bytes cannot code "
                         f"{e.n_tokens} tokens (corrupt container)")
+        # fallback-tagged v5 chunks need no model: decode them NOW, before
+        # anything is queued — a corrupt fallback stream therefore fails
+        # the whole submit (ContainerError) without orphaning queued work
+        fb_tokens: dict[int, np.ndarray] = {}
+        for i, (stream, entry) in enumerate(zip(streams, info.entries)):
+            if entry.is_llm or entry.n_tokens == 0:
+                continue
+            try:
+                fb_tokens[i] = CodecRouter.decode_fallback(
+                    entry.codec_name, stream, entry.n_tokens, info.vocab)
+            except ValueError as e:
+                raise ContainerError(f"corrupt container: chunk {i}: {e}")
         job = Job(self._new_job_id(), DECOMPRESS, priority, info.n_chunks,
                   info.n_tokens,
                   lambda chunks: np.concatenate(chunks)[:info.n_tokens]
@@ -164,6 +250,14 @@ class CompressionService:
             job.resolve(self._legacy_compressor().decompress(blob))
             return JobHandle(job, self)
         for i, (stream, entry) in enumerate(zip(streams, info.entries)):
+            if i in fb_tokens:
+                self.registry.counter(
+                    "decompress.fallback_chunks",
+                    "fallback-tagged chunks decoded without the "
+                    "model").inc()
+                job._chunk_done(i, fb_tokens[i],
+                                codec=entry.codec_name)
+                continue
             self.scheduler.submit(
                 ChunkTask(job, i, DECOMPRESS, entry.n_tokens,
                           stream=stream),

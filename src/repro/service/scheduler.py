@@ -218,6 +218,16 @@ class SlotScheduler:
         self._lanes = np.arange(B)
         self._fbuf = np.ones((B, C), np.int64)
         self._nesc = np.zeros(B, np.int64)
+        # router-decision counters (DESIGN.md §11) — only move when the
+        # service submits routed chunks (task.fallback attached)
+        self._c_route_llm = self.registry.counter(
+            obs.ROUTER_CHUNKS_LLM, "chunks routed to the LLM entropy path")
+        self._c_route_fb = self.registry.counter(
+            obs.ROUTER_CHUNKS_FALLBACK,
+            "chunks routed to a fallback byte codec")
+        self._c_route_flips = self.registry.counter(
+            obs.ROUTER_FLIPS,
+            "chunks where LLM encode ran but the fallback stream won")
 
     # ------------------------------------------------------------- intake
     def submit(self, task: ChunkTask, priority: int = 0) -> None:
@@ -377,6 +387,7 @@ class SlotScheduler:
 
     def _finish_slot(self, b: int) -> None:
         task = self._tasks[b]
+        codec = None
         try:
             coded = 0.0
             tel = self.registry.enabled
@@ -385,6 +396,20 @@ class SlotScheduler:
                     coded = self._enc.slot_cost_bits(b)
                 result = self._enc.flush_slot(b)
                 nbytes = len(result)
+                if task.fallback is not None:
+                    # routed chunk: the probe kept the LLM path, but the
+                    # realized fallback stream still wins if smaller —
+                    # flip post-hoc (lane count stays coding geometry;
+                    # lane composition is free, DESIGN.md §11)
+                    if len(task.fallback) < nbytes:
+                        result = task.fallback
+                        nbytes = len(result)
+                        codec = task.fallback_codec
+                        coded = 8.0 * nbytes
+                        self._c_route_fb.inc()
+                        self._c_route_flips.inc()
+                    else:
+                        self._c_route_llm.inc()
             else:
                 if not self._dec.exhausted(b):
                     raise ContainerError(
@@ -406,9 +431,10 @@ class SlotScheduler:
                 diag = ChunkDiagnostics(
                     chunk_index=task.chunk_index, n_tokens=task.valid,
                     stream_bytes=nbytes, coded_bits=float(coded),
-                    n_escapes=int(self._nesc[b]))
+                    n_escapes=int(self._nesc[b]),
+                    codec=codec or "rans")
                 self._h_bpt.observe(diag.bits_per_token)
-            task.complete(result, diag)
+            task.complete(result, diag, codec=codec)
         except Exception as e:
             self._c_failures.inc()
             obs.log_exception("scheduler.chunk_failed", e,

@@ -34,17 +34,26 @@ class ChunkTask:
     Exactly one of ``tokens`` (compress: the chunk's token ids, unpadded)
     or ``stream`` (decompress: the chunk's coded bytes) is set. ``valid``
     is the chunk's true token count (< chunk_size only for a job's final
-    chunk)."""
+    chunk).
+
+    Routed compress chunks (DESIGN.md §11) carry their realized
+    best-fallback stream in ``fallback``: the scheduler compares it
+    against the slot encoder's flushed bytes at completion and keeps the
+    smaller — the chunk still took a model slot (the probe kept it), but
+    the container never pays more than the fallback would."""
     job: "Job"
     chunk_index: int
     kind: str
     valid: int
     tokens: Optional[np.ndarray] = None
     stream: Optional[bytes] = None
+    fallback: Optional[bytes] = None
+    fallback_codec: str = ""
 
     def complete(self, result,
-                 diag: Optional[obs.ChunkDiagnostics] = None) -> None:
-        self.job._chunk_done(self.chunk_index, result, diag)
+                 diag: Optional[obs.ChunkDiagnostics] = None,
+                 codec: Optional[str] = None) -> None:
+        self.job._chunk_done(self.chunk_index, result, diag, codec)
 
     def fail(self, err: Exception) -> None:
         self.job._fail(err)
@@ -65,18 +74,25 @@ class Job:
     registry: Optional[obs.MetricsRegistry] = None
     _results: dict = field(default_factory=dict)
     _diags: dict = field(default_factory=dict)
+    # chunk_index -> fallback codec *name* for chunks the router diverted
+    # (absent => the container's entropy codec). The compress assemble
+    # closure turns these into v5 per-chunk codec tags.
+    _codecs: dict = field(default_factory=dict)
     _result: Any = None
     _error: Optional[Exception] = None
     _done: bool = False
 
     def _chunk_done(self, chunk_index: int, result,
-                    diag: Optional[obs.ChunkDiagnostics] = None) -> None:
+                    diag: Optional[obs.ChunkDiagnostics] = None,
+                    codec: Optional[str] = None) -> None:
         if self._done:
             return
         if chunk_index in self._results:
             raise RuntimeError(
                 f"job {self.job_id}: chunk {chunk_index} completed twice")
         self._results[chunk_index] = result
+        if codec:
+            self._codecs[chunk_index] = codec
         if diag is not None:
             self._diags[chunk_index] = diag
         if len(self._results) == self.n_chunks:

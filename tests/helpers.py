@@ -66,8 +66,45 @@ class GoldenPredictor:
 
 
 def golden_tokens(n=45, seed=1234, vocab=63):
-    """The fixed token stream the golden containers were built from."""
+    """The fixed token stream the golden containers were built from.
+    Uniform random — the GoldenPredictor table model genuinely *loses*
+    to raw store on this stream (~9.5 model bits/token vs 8 packed), so
+    it doubles as the router's adversarial input."""
     return np.random.default_rng(seed).integers(0, vocab, n).astype(np.int32)
+
+
+def golden_self_tokens(n=45, seed=5678, vocab=64):
+    """Tokens softmax-sampled from the GoldenPredictor's own table — the
+    stream that model predicts well, i.e. the paper's LLM-generated-text
+    regime where the entropy path wins and the router must keep it."""
+    pred = GoldenPredictor(vocab_size=vocab)
+    rng = np.random.default_rng(seed)
+    out = np.empty(n, np.int32)
+    prev = pred.bos_id
+    for i in range(n):
+        logits = pred._table[prev].astype(np.float64)
+        p = np.exp(logits - logits.max())
+        prev = out[i] = rng.choice(vocab, p=p / p.sum())
+    return out
+
+
+def golden_mixed_tokens():
+    """The fixed mixed-regime stream behind the v5 routed golden: at
+    chunk_size 16 it splits into 4 chunks alternating model-friendly
+    (self-generated -> rans tag) and adversarial (uniform random -> raw
+    tag), the last one a 13-token tail."""
+    return np.concatenate([golden_self_tokens(16, seed=11),
+                           golden_tokens(16, seed=22),
+                           golden_self_tokens(16, seed=33),
+                           golden_tokens(13, seed=44)])
+
+
+def golden_text_tokens(n=140, vocab=63):
+    """Highly repetitive 'text-like' stream: a dictionary codec (lzma /
+    zstd) beats both raw store and the table model on it — the forced-
+    fallback goldens use it so the fallback codec actually wins."""
+    motif = np.array([5, 6, 7, 5, 6, 7, 9, 9, 5, 6], np.int32) % vocab
+    return np.tile(motif, n // motif.size + 1)[:n].astype(np.int32)
 
 
 def rand_batch(cfg, B=2, S=16, key=0):

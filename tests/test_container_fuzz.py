@@ -1,6 +1,7 @@
 """Corrupt/truncated/bit-flipped container fuzzing + v4 random access.
 
-Guarantees under test (ISSUE 2 satellites):
+Guarantees under test (ISSUE 2 satellites; extended to the v5
+mixed-codec container for ISSUE 8):
 
 * every strict prefix of a container raises ``ContainerError`` — never a
   bare IndexError/struct.error from running off the end of the blob;
@@ -16,7 +17,14 @@ Guarantees under test (ISSUE 2 satellites):
   of a full decompress, touching only that interval's bytes;
 * a container whose header claims rANS at a precision above the coder
   limit is rejected at parse (the *container*, not the compressor
-  object, selects the codec — satellite fix).
+  object, selects the codec — satellite fix);
+* a routed **v5** container detects every single-bit flip too — the
+  footer hash additionally covers the per-chunk codec tags, and the
+  per-chunk xxh64 covers fallback streams exactly like entropy streams;
+* v5 semantic validation holds even when an attacker *recomputes* the
+  checksums after tampering: unknown/mismatched codec tags and
+  structurally broken fallback streams raise ContainerError, never a
+  silent wrong decode.
 """
 import pathlib
 import struct
@@ -24,9 +32,12 @@ import struct
 import numpy as np
 import pytest
 
-from helpers import GoldenPredictor, golden_tokens
-from repro.core import ContainerError, LLMCompressor, read_index
-from repro.core.compressor import MAGIC, _V3_HEADER, CODEC_RANS
+from helpers import GoldenPredictor, golden_self_tokens, golden_tokens
+from repro.core import (ContainerError, LLMCompressor, RouterConfig,
+                        read_header, read_index)
+from repro.core.checksum import xxh64
+from repro.core.compressor import (MAGIC, _V3_HEADER, _V4_TRAILER, _V5_ENTRY,
+                                   _V5_ENTRY_SIZE, _V5_END_MAGIC, CODEC_RANS)
 
 GOLDEN = pathlib.Path(__file__).parent / "golden"
 
@@ -183,3 +194,137 @@ def test_empty_and_garbage_blobs():
     for blob in (b"", b"LL", b"XXXX" + b"\x00" * 40, MAGIC):
         with pytest.raises(ContainerError):
             comp.decompress(blob)
+
+
+# ----------------------------------------------------- v5 mixed containers
+@pytest.fixture(scope="module")
+def v5_case():
+    """A routed v5 container whose index genuinely mixes entropy-coded
+    and fallback chunks — the fuzz below must exercise both stream
+    kinds and the codec-tag bytes."""
+    comp = _comp(topk=8, container_version=5, route="auto",
+                 router=RouterConfig(fallbacks=("raw", "lzma")))
+    toks = np.concatenate([golden_self_tokens(32, seed=3),
+                           golden_tokens(32, seed=4),
+                           golden_self_tokens(16, seed=5),
+                           golden_tokens(21, seed=6)])
+    blob, _ = comp.compress(toks)
+    tags = {e.codec_name for e in read_index(blob).entries}
+    assert "rans" in tags and tags != {"rans"}
+    return comp, toks, blob
+
+
+def test_every_v5_truncation_raises_container_error(v5_case):
+    comp, _, blob = v5_case
+    for cut in range(len(blob)):
+        with pytest.raises(ContainerError):
+            comp.decompress(blob[:cut])
+
+
+def test_v5_detects_every_single_bit_flip(v5_case):
+    """Exhaustive: flip each bit of the mixed container; decompress must
+    raise ContainerError every time. Flips in the codec-tag bytes are
+    caught by the footer hash (the tags live inside the hashed index),
+    flips in fallback streams by the per-chunk xxh64 — same coverage as
+    the entropy chunks."""
+    comp, _, blob = v5_case
+    for i in range(len(blob)):
+        for bit in range(8):
+            bad = bytearray(blob)
+            bad[i] ^= 1 << bit
+            with pytest.raises(ContainerError):
+                comp.decompress(bytes(bad))
+
+
+def _v5_tamper(blob, chunk, tag=None, stream=None):
+    """Rewrite chunk ``chunk``'s codec tag and/or stream bytes in a v5
+    container and RECOMPUTE every checksum (per-chunk xxh64 + footer
+    hash), so the corruption-detection layer passes and only the
+    semantic validation behind it stands between the tamper and a
+    silent wrong decode. Same-length stream patches only (the body's
+    varint framing stays valid)."""
+    assert blob[-4:] == _V5_END_MAGIC
+    info = read_header(blob)
+    n, footer_len = struct.unpack("<II", blob[-12:-4])
+    footer_start = len(blob) - _V4_TRAILER - footer_len
+    entries = [list(struct.unpack_from(_V5_ENTRY, blob,
+                                       footer_start + i * _V5_ENTRY_SIZE))
+               for i in range(n)]
+    body = bytearray(blob[:footer_start])
+    if stream is not None:
+        off, ln = entries[chunk][0], entries[chunk][1]
+        assert len(stream) == ln
+        body[off:off + ln] = stream
+        entries[chunk][4] = xxh64(bytes(stream))
+    if tag is not None:
+        entries[chunk][3] = tag
+    ents = b"".join(struct.pack(_V5_ENTRY, *e) for e in entries)
+    eb_off = footer_start + n * _V5_ENTRY_SIZE
+    tail = ents + blob[eb_off:eb_off + 4]           # + u32 encode_batch
+    return (bytes(body) + tail
+            + struct.pack("<Q", xxh64(blob[:info.header_size] + tail))
+            + struct.pack("<II", n, len(tail) + 8) + _V5_END_MAGIC)
+
+
+def test_v5_semantic_validation_behind_checksums(v5_case):
+    """Checksum-fixing tampers still fail loudly: the index validation
+    and fallback-stream structure checks are real, not artifacts of the
+    hash coverage."""
+    comp, _, blob = v5_case
+    info = read_index(blob)
+    # sanity: an untampered rewrite round-trips bit-exactly
+    assert _v5_tamper(blob, 0) == blob
+    # unknown codec id in a tag
+    with pytest.raises(ContainerError, match="unknown codec id"):
+        comp.decompress(_v5_tamper(blob, 0, tag=9))
+    # entropy-codec tag that contradicts the header codec (rans=1, ac=0)
+    with pytest.raises(ContainerError, match="entropy codec"):
+        comp.decompress(_v5_tamper(blob, 0, tag=0))
+    fb = next(i for i, e in enumerate(info.entries) if not e.is_llm)
+    s = bytearray(blob[info.entries[fb].offset:
+                       info.entries[fb].offset + info.entries[fb].length])
+    # illegal token width in the fallback stream's framing byte
+    bad_width = bytes([3]) + bytes(s[1:])
+    with pytest.raises(ContainerError, match="width"):
+        comp.decompress(_v5_tamper(blob, fb, stream=bad_width))
+    # width that disagrees with the payload length
+    wrong_width = bytes([2 if s[0] == 1 else 1]) + bytes(s[1:])
+    with pytest.raises(ContainerError, match=f"chunk {fb}"):
+        comp.decompress(_v5_tamper(blob, fb, stream=wrong_width))
+    # retagging a fallback chunk as a different fallback codec: the
+    # stream no longer parses under that codec — error, never garbage
+    other = 3 if info.entries[fb].codec == 4 else 4
+    with pytest.raises(ContainerError, match=f"chunk {fb}"):
+        comp.decompress(_v5_tamper(blob, fb, tag=other))
+
+
+def test_v5_range_decode_matches_full_decode(v5_case):
+    """Random access over a mixed-codec archive: every interval equals
+    the matching slice of a full decode (the v4 guarantee survives
+    per-chunk codecs)."""
+    comp, toks, blob = v5_case
+    full = comp.decompress(blob)
+    assert np.array_equal(full, toks)
+    info = read_index(blob)
+    C = info.chunk_size
+    for lo in range(info.n_chunks):
+        for hi in range(lo + 1, info.n_chunks + 1):
+            part = comp.decompress_range(blob, lo, hi)
+            assert np.array_equal(part,
+                                  full[lo * C:min(hi * C, toks.size)]), \
+                (lo, hi)
+
+
+def test_v5_range_decode_detects_fallback_corruption(v5_case):
+    """Chunk-level corruption detection localizes across codecs: damage
+    to a fallback chunk's stream fails only reads that touch it."""
+    comp, _, blob = v5_case
+    info = read_index(blob)
+    fb = next(i for i, e in enumerate(info.entries) if not e.is_llm)
+    bad = bytearray(blob)
+    bad[info.entries[fb].offset] ^= 0x01
+    with pytest.raises(ContainerError, match=f"chunk {fb}"):
+        comp.decompress_range(bytes(bad), fb, fb + 1)
+    lo = 0 if fb else 1
+    assert np.array_equal(comp.decompress_range(bytes(bad), lo, lo + 1),
+                          comp.decompress_range(blob, lo, lo + 1))

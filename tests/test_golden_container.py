@@ -1,72 +1,118 @@
-"""Golden-container regression: frozen byte blobs guard the format.
+"""Golden-container regression matrix: frozen byte blobs guard the format.
 
-``tests/golden/`` holds containers produced by known-good code:
+``tests/golden/`` holds one container per cell of the cross-version
+matrix (version × codec × cdf-mode/route), produced by known-good code:
 
 * ``v2_*.llmc`` — written by the SEED compressor (container version 2,
   implicit AC codec, no codec byte). Frozen forever; they can no longer
   be regenerated, which is the point — new code must keep decoding old
   archives bit-exactly.
-* ``v3_*.llmc`` — written by the current compressor (codec byte: 0=AC,
-  1=rANS; the default write version). Encode must stay byte-stable: any
+* ``v3_*.llmc`` — codec byte (0=AC, 1=rANS); the default write version
+  for the pure-LLM route. Encode must stay byte-stable: any
   container-format or coder drift shows up as a byte diff here before it
   silently corrupts archives in the wild.
 * ``v4_*.llmc`` — the seekable format (index footer + xxh64 checksums)
-  written by ``container_version=4`` and by the compression service.
+  written by ``container_version=4`` and the default service path.
   Byte-stable like v3, and additionally the index must keep verifying.
+* ``v5_*.llmc`` — v4 plus a hash-covered per-chunk codec tag
+  (DESIGN.md §11). Three routing regimes are pinned: pure-LLM
+  (``v5_rans_*``: every tag is the header entropy codec), adaptive
+  mixed (``v5_mixed_raw``: the fixed interleaved stream routes to
+  exactly [rans, raw, rans, raw]), and forced-fallback
+  (``v5_fallback_lzma``: repetitive text under ``route="lzma"``, no
+  chunk touches the model). The lzma cell is decode-only — its payload
+  bytes depend on the liblzma build, so like v2 it guards decode, not
+  re-encode.
 
 All goldens use the deterministic, model-free ``GoldenPredictor`` and
-the fixed ``golden_tokens`` streams (tests/helpers.py), so no model
-weights are involved.
+fixed token streams (tests/helpers.py), so no model weights are
+involved; routing decisions are deterministic because the probe scores
+through the same table.
 """
 import pathlib
 
 import numpy as np
 import pytest
 
-from helpers import GoldenPredictor, golden_tokens
-from repro.core import LLMCompressor
+from helpers import (GoldenPredictor, golden_mixed_tokens,
+                     golden_text_tokens, golden_tokens)
+from repro.core import LLMCompressor, RouterConfig, read_header
 
 GOLDEN = pathlib.Path(__file__).parent / "golden"
 
-# name -> (constructor kwargs, token stream)
+# The matrix: name -> (version, constructor kwargs, token stream). The
+# file name spells the cell: version, codec, and cdf mode (topk/full)
+# or routing regime (mixed/fallback).
 CASES = {
-    "v2_topk.llmc": (dict(topk=8), golden_tokens()),
-    "v2_full.llmc": (dict(topk=0), golden_tokens(37, seed=77)),
-    "v3_rans_topk.llmc": (dict(topk=8, codec="rans"), golden_tokens()),
-    "v3_rans_full.llmc": (dict(topk=0, codec="rans"),
+    "v2_topk.llmc": (2, dict(topk=8), golden_tokens()),
+    "v2_full.llmc": (2, dict(topk=0), golden_tokens(37, seed=77)),
+    "v3_rans_topk.llmc": (3, dict(topk=8, codec="rans"), golden_tokens()),
+    "v3_rans_full.llmc": (3, dict(topk=0, codec="rans"),
                           golden_tokens(37, seed=77)),
-    "v3_ac_topk.llmc": (dict(topk=8, codec="ac"), golden_tokens()),
-    "v4_rans_topk.llmc": (dict(topk=8, codec="rans", container_version=4),
-                          golden_tokens()),
-    "v4_rans_full.llmc": (dict(topk=0, codec="rans", container_version=4),
+    "v3_ac_topk.llmc": (3, dict(topk=8, codec="ac"), golden_tokens()),
+    "v4_rans_topk.llmc": (4, dict(topk=8, codec="rans",
+                                  container_version=4), golden_tokens()),
+    "v4_rans_full.llmc": (4, dict(topk=0, codec="rans",
+                                  container_version=4),
                           golden_tokens(37, seed=77)),
-    "v4_ac_topk.llmc": (dict(topk=8, codec="ac", container_version=4),
+    "v4_ac_topk.llmc": (4, dict(topk=8, codec="ac", container_version=4),
                         golden_tokens()),
+    "v5_rans_topk.llmc": (5, dict(topk=8, codec="rans",
+                                  container_version=5), golden_tokens()),
+    "v5_rans_full.llmc": (5, dict(topk=0, codec="rans",
+                                  container_version=5),
+                          golden_tokens(37, seed=77)),
+    "v5_mixed_raw.llmc": (5, dict(topk=8, codec="rans",
+                                  container_version=5, route="auto",
+                                  router=RouterConfig(fallbacks=("raw",))),
+                          golden_mixed_tokens()),
+    "v5_fallback_lzma.llmc": (5, dict(topk=8, codec="rans",
+                                      container_version=5, route="lzma",
+                                      chunk_size=64),
+                              golden_text_tokens()),
 }
+
+# Cells whose bytes must decode but are NOT re-encoded for identity:
+# v2 because the seed writer is gone; the lzma cell because liblzma
+# builds may legally differ byte-for-byte (raw/rans/zstd-free cells
+# depend only on this repo's own coders and numpy, so they are stable).
+DECODE_ONLY = {"v2_topk.llmc", "v2_full.llmc", "v5_fallback_lzma.llmc"}
 
 
 def _comp(kw):
-    return LLMCompressor(GoldenPredictor(), chunk_size=16, decode_batch=4,
-                         **kw)
+    base = dict(chunk_size=16, decode_batch=4)
+    base.update(kw)
+    return LLMCompressor(GoldenPredictor(), **base)
 
 
 @pytest.mark.parametrize("name", sorted(CASES))
 def test_golden_decodes(name):
-    """Every checked-in container — seed v2 and current v3, both codecs —
-    decodes to its original token stream through the current path."""
-    kw, toks = CASES[name]
+    """Every checked-in container — all four versions, every codec and
+    routing regime — decodes to its original token stream through the
+    current path."""
+    _, kw, toks = CASES[name]
     blob = (GOLDEN / name).read_bytes()
     assert np.array_equal(_comp(kw).decompress(blob), toks)
 
 
-@pytest.mark.parametrize("name", [n for n in sorted(CASES)
-                                  if not n.startswith("v2")])
+@pytest.mark.parametrize("name",
+                         [n for n in sorted(CASES) if n not in DECODE_ONLY])
 def test_encode_byte_stable(name):
-    """Re-encoding the golden inputs must reproduce the golden bytes
-    (v3 and v4 — v2 is read-only and can no longer be written)."""
-    kw, toks = CASES[name]
+    """Re-encoding the golden inputs must reproduce the golden bytes.
+    For the routed v5 cells this also freezes the router's *decisions*:
+    a policy drift that re-routes a chunk changes the tag byte and the
+    stream, and fails here before it ships."""
+    _, kw, toks = CASES[name]
     blob, _ = _comp(kw).compress(toks)
     assert blob == (GOLDEN / name).read_bytes()
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_header_version_matches_cell(name):
+    """The matrix is honest: each blob's parsed header version equals
+    the version its file name (and CASES row) claims."""
+    version, _, _ = CASES[name]
+    assert read_header((GOLDEN / name).read_bytes()).version == version
 
 
 def test_v2_header_shape_frozen():
@@ -81,22 +127,92 @@ def test_v3_header_carries_codec():
     assert (GOLDEN / "v3_ac_topk.llmc").read_bytes()[19] == 0
 
 
-def test_v4_goldens_carry_verified_index():
+@pytest.mark.parametrize("name",
+                         [n for n in sorted(CASES) if not n.startswith(
+                             ("v2", "v3"))])
+def test_indexed_goldens_carry_verified_index(name):
     from repro.core import read_index
-    for name in sorted(CASES):
-        if not name.startswith("v4"):
-            continue
-        kw, toks = CASES[name]
-        blob = (GOLDEN / name).read_bytes()
-        info = read_index(blob)             # verifies footer checksum
-        assert blob[-4:] == b"LC4F"
-        assert info.n_chunks == len(info.entries)
-        assert sum(e.n_tokens for e in info.entries) == toks.size
-        # the encoder's batch shape is part of the coding geometry on
-        # non-batch-invariant models; v4 records the lane count every
-        # chunk ran at — min(decode_batch=4, n_chunks) for the grouped path
+    _, kw, toks = CASES[name]
+    blob = (GOLDEN / name).read_bytes()
+    info = read_index(blob)             # verifies footer checksum
+    assert blob[-4:] == (b"LC4F" if name.startswith("v4") else b"LC5F")
+    assert info.n_chunks == len(info.entries)
+    assert sum(e.n_tokens for e in info.entries) == toks.size
+    # the encoder's batch shape is part of the coding geometry on
+    # non-batch-invariant models; v4+ records the lane count the model
+    # program actually ran at. That counts chunks that ENTERED the model
+    # batch, which can exceed the surviving LLM tags (a chunk may flip
+    # to its fallback after encode) but never falls below them, and is 0
+    # when no chunk touched the model at all (forced-fallback cell). The
+    # mixed golden pins 3: the probe skipped one random chunk, kept the
+    # other (it flipped to raw only after the realized-size compare).
+    n_llm = sum(e.is_llm for e in info.entries)
+    assert min(4, n_llm) <= info.encode_batch <= min(4, info.n_chunks)
+    if name == "v5_mixed_raw.llmc":
+        assert info.encode_batch == 3
+    elif name == "v5_fallback_lzma.llmc":
+        assert info.encode_batch == 0
+    else:
         assert info.encode_batch == min(4, info.n_chunks)
-        # random access: last chunk alone
+    if info.n_chunks:
+        # random access: last chunk alone (works across mixed codecs)
+        C = info.chunk_size
         last = _comp(kw).decompress_range(blob, info.n_chunks - 1,
                                           info.n_chunks)
-        assert np.array_equal(last, toks[(info.n_chunks - 1) * 16:])
+        assert np.array_equal(last, toks[(info.n_chunks - 1) * C:])
+
+
+def test_v5_pure_llm_tags_are_entropy_codec():
+    """The pure-LLM v5 cells tag every chunk with the header codec —
+    decoders may treat them exactly like a v4 container."""
+    from repro.core import read_index
+    for name in ("v5_rans_topk.llmc", "v5_rans_full.llmc"):
+        info = read_index((GOLDEN / name).read_bytes())
+        assert [e.codec_name for e in info.entries] == \
+            ["rans"] * info.n_chunks
+        assert all(e.is_llm for e in info.entries)
+
+
+def test_v5_mixed_golden_routing_frozen():
+    """The mixed golden's routing is pinned chunk by chunk: the
+    self-generated chunks stayed on the entropy path, the uniform-random
+    chunks fell back to raw store."""
+    from repro.core import read_index
+    info = read_index((GOLDEN / "v5_mixed_raw.llmc").read_bytes())
+    assert [e.codec_name for e in info.entries] == \
+        ["rans", "raw", "rans", "raw"]
+
+
+def test_v5_fallback_golden_never_touches_model():
+    """The forced-lzma golden: every chunk carries a fallback tag (lzma
+    where it wins, raw for the short tail) and encode_batch is 0 — no
+    model lanes ran. Decode must not need the model either: a predictor
+    whose table differs still reconstructs the stream."""
+    from repro.core import read_index
+    blob = (GOLDEN / "v5_fallback_lzma.llmc").read_bytes()
+    info = read_index(blob)
+    assert info.encode_batch == 0
+    names = [e.codec_name for e in info.entries]
+    assert names == ["lzma", "lzma", "raw"]
+    other = LLMCompressor(GoldenPredictor(seed=999), chunk_size=64,
+                          decode_batch=4, topk=8)
+    assert np.array_equal(other.decompress(blob), golden_text_tokens())
+
+
+def test_v5_mixed_range_matches_full_decode():
+    """Random access stays exact across mixed codecs: every chunk
+    interval of the routed golden equals the matching slice of a full
+    decode."""
+    _, kw, toks = CASES["v5_mixed_raw.llmc"]
+    comp = _comp(kw)
+    blob = (GOLDEN / "v5_mixed_raw.llmc").read_bytes()
+    full = comp.decompress(blob)
+    assert np.array_equal(full, toks)
+    from repro.core import read_index
+    info = read_index(blob)
+    C = info.chunk_size
+    for lo in range(info.n_chunks):
+        for hi in range(lo + 1, info.n_chunks + 1):
+            part = comp.decompress_range(blob, lo, hi)
+            assert np.array_equal(
+                part, full[lo * C:min(hi * C, toks.size)]), (lo, hi)
