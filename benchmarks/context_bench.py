@@ -1,0 +1,256 @@
+"""Carried-context ratio + prefix-cache prefill benchmark (DESIGN.md §12).
+
+Two CI gates for the v6 context engine:
+
+* **carried ratio**: on a context-sensitive corpus, a carried v6
+  archive (``context_window=K``) must be at least ``RATIO_FLOOR`` times
+  smaller than the context-free v6 archive of the same geometry. The
+  corpus is sampled from an order-K table model — next-token logits
+  depend on the last K tokens — so a fresh chunk start mispredicts its
+  first K tokens (the BOS-padded history differs from the generation
+  history) while a carried chunk sees the exact context the generator
+  had. This is the paper's conversation-log regime: chunking loses
+  cross-boundary context, recipes buy it back.
+* **prefill savings**: on a shared-template workload (many jobs
+  declaring the same shared prefix), the scheduler with the radix
+  prefix cache must spend at least ``PREFILL_FLOOR`` times fewer
+  prefill lane-steps than with the cache disabled, with hits > 0 and
+  byte-identical archives. Each avoided lane-step is one decode_step a
+  real accelerator would have paid.
+
+Both gates are deterministic (model-free table predictors, fixed
+seeds) — a failure means the engine regressed, not the data.
+
+  PYTHONPATH=src python benchmarks/context_bench.py [--smoke]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/run.py
+convention) and exits non-zero when either gate fails.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path[:0] = ["src", "."]
+
+RATIO_FLOOR = 1.10      # carried vs context-free container size
+PREFILL_FLOOR = 1.3     # cache-off vs cache-on prefill lane-steps
+K = 8                   # model order == carry window
+CHUNK = 32
+SIGMA = 5.0             # logit scale: sharp when context is right
+
+
+class OrderKPredictor:
+    """Order-K table model: logits are the sum of K per-offset (V, V)
+    tables indexed by the last K tokens (BOS-padded). Teacher-forced and
+    incremental paths share ``_logits`` — one accumulation order — so
+    they agree bit-exactly with no jitted model involved."""
+
+    def __init__(self, k=K, vocab=64, seed=0, sigma=SIGMA):
+        self.vocab_size = int(vocab)
+        self.bos_id = self.vocab_size - 1
+        self.K = int(k)
+        rng = np.random.default_rng(seed)
+        self._tables = (rng.standard_normal((self.K, vocab, vocab))
+                        * (sigma / np.sqrt(self.K))).astype(np.float32)
+
+    def _logits(self, hist):
+        """hist: (B, K) token window, most recent last."""
+        out = np.zeros((hist.shape[0], self.vocab_size), np.float32)
+        for j in range(self.K):
+            out += self._tables[j][hist[:, self.K - 1 - j]]
+        return out
+
+    def score_chunks(self, tokens):
+        tokens = np.asarray(tokens, np.int32)
+        B, T = tokens.shape
+        hist = np.full((B, self.K), self.bos_id, np.int32)
+        out = np.empty((B, T, self.vocab_size), np.float32)
+        for t in range(T):
+            out[:, t] = self._logits(hist)
+            hist = np.concatenate([hist[:, 1:], tokens[:, t:t + 1]], axis=1)
+        return out
+
+    def begin_decode(self, batch):
+        # state = the K-1 tokens before the one decode_step is fed
+        return np.full((batch, self.K - 1), self.bos_id, np.int32)
+
+    def decode_step(self, state, prev_tokens):
+        prev = np.asarray(prev_tokens, np.int32).reshape(-1, 1)
+        hist = np.concatenate([state, prev], axis=1)
+        return self._logits(hist), hist[:, 1:]
+
+
+def orderk_corpus(pred: OrderKPredictor, n: int, seed=1) -> np.ndarray:
+    """Softmax-sample ``n`` tokens from the model's own distribution —
+    the LLM-generated-text regime where next-token coding wins."""
+    rng = np.random.default_rng(seed)
+    hist = np.full((1, pred.K), pred.bos_id, np.int32)
+    out = np.empty(n, np.int32)
+    for t in range(n):
+        lg = pred._logits(hist)[0].astype(np.float64)
+        p = np.exp(lg - lg.max())
+        out[t] = rng.choice(pred.vocab_size, p=p / p.sum())
+        hist = np.concatenate([hist[:, 1:], [[out[t]]]], axis=1)
+    return out
+
+
+class TablePredictor:
+    """Order-1 table model with the prefix-cache hooks (stateless, so a
+    lane snapshot is trivial) — isolates the prefill-savings measurement
+    from model cost; the scheduler's prefill lane-step counter is the
+    dispatch count a real accelerator would pay."""
+
+    def __init__(self, vocab=64, seed=0):
+        self.vocab_size = int(vocab)
+        self.bos_id = self.vocab_size - 1
+        rng = np.random.default_rng(seed)
+        self._table = (rng.standard_normal((vocab, vocab)) * 2.0).astype(
+            np.float32)
+
+    def score_chunks(self, tokens):
+        tokens = np.asarray(tokens, np.int32)
+        prev = np.concatenate(
+            [np.full((tokens.shape[0], 1), self.bos_id, np.int32),
+             tokens[:, :-1]], axis=1)
+        return self._table[prev]
+
+    def begin_decode(self, batch):
+        return None
+
+    def decode_step(self, state, prev_tokens):
+        return self._table[np.asarray(prev_tokens, np.int32)], state
+
+    def snapshot_slot(self, state, lane):
+        return ("snap",)
+
+    def restore_slot(self, state, snapshot, mask):
+        return state
+
+
+def _self_tokens(pred, n, seed):
+    rng = np.random.default_rng(seed)
+    out = np.empty(n, np.int32)
+    prev = pred.bos_id
+    for i in range(n):
+        lg = pred._table[prev].astype(np.float64)
+        p = np.exp(lg - lg.max())
+        prev = out[i] = rng.choice(pred.vocab_size, p=p / p.sum())
+    return out
+
+
+# ----------------------------------------------------------- carried ratio
+def run_ratio_bench(n_tokens=1024, stripes=4):
+    from repro.core import LLMCompressor, RECIPE_CARRY, read_index
+
+    gen = OrderKPredictor()
+    toks = orderk_corpus(gen, n_tokens)
+    kw = dict(chunk_size=CHUNK, decode_batch=4, topk=0, codec="rans",
+              container_version=6)
+
+    t0 = time.time()
+    fresh_blob, _ = LLMCompressor(OrderKPredictor(), **kw).compress(toks)
+    t_fresh = time.time() - t0
+    t0 = time.time()
+    carried_blob, _ = LLMCompressor(OrderKPredictor(), context_window=K,
+                                    context_stripes=stripes,
+                                    **kw).compress(toks)
+    t_carried = time.time() - t0
+
+    info = read_index(carried_blob)
+    assert any(e.recipe_kind == RECIPE_CARRY for e in info.entries)
+    # losslessness of both, full + ranged, on fresh decoder objects
+    dec = LLMCompressor(OrderKPredictor(), **kw)
+    assert np.array_equal(dec.decompress(fresh_blob), toks)
+    assert np.array_equal(dec.decompress(carried_blob), toks)
+    mid = info.n_chunks // 2
+    part = dec.decompress_range(carried_blob, mid, mid + 1)
+    assert np.array_equal(part, toks[mid * CHUNK:(mid + 1) * CHUNK])
+
+    gain = len(fresh_blob) / len(carried_blob)
+    return {
+        "n_tokens": int(toks.size), "n_chunks": info.n_chunks,
+        "fresh_bytes": len(fresh_blob), "carried_bytes": len(carried_blob),
+        "ratio_gain": gain, "ratio_floor": RATIO_FLOOR,
+        "t_fresh_s": t_fresh, "t_carried_s": t_carried,
+        "gate_pass": bool(gain >= RATIO_FLOOR),
+    }
+
+
+# --------------------------------------------------------- prefill savings
+def run_prefill_bench(n_jobs=8, prefix_len=64, job_tokens=48, slots=4):
+    from repro.service import CompressionService
+
+    sp = _self_tokens(TablePredictor(), prefix_len, seed=77)
+    jobs = [_self_tokens(TablePredictor(), job_tokens, seed=100 + i)
+            for i in range(n_jobs)]
+
+    def run(cache_on):
+        svc = CompressionService(TablePredictor(), slots=slots,
+                                 chunk_size=16, topk=8)
+        if not cache_on:
+            svc.scheduler.prefix_cache = None
+        t0 = time.time()
+        handles = [svc.submit_compress(t, shared_prefix=sp) for t in jobs]
+        blobs = [h.result()[0] for h in handles]
+        return svc, blobs, time.time() - t0
+
+    svc_on, blobs_on, t_on = run(True)
+    svc_off, blobs_off, t_off = run(False)
+    assert blobs_on == blobs_off, "prefix cache changed archive bytes"
+    cache = svc_on.snapshot()["prefix_cache"]
+    on_steps = int(svc_on.stats.prefill_steps)
+    off_steps = int(svc_off.stats.prefill_steps)
+    savings = off_steps / max(1, on_steps)
+    return {
+        "n_jobs": n_jobs, "prefix_len": prefix_len,
+        "prefill_steps_on": on_steps, "prefill_steps_off": off_steps,
+        "prefill_savings": savings, "prefill_floor": PREFILL_FLOOR,
+        "cache_hits": cache["hits"], "cache_misses": cache["misses"],
+        "tokens_reused": cache["tokens_reused"],
+        "wall_on_s": t_on, "wall_off_s": t_off,
+        "gate_pass": bool(savings >= PREFILL_FLOOR and cache["hits"] > 0),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus / few jobs; same gates")
+    args = ap.parse_args()
+
+    if args.smoke:
+        ratio = run_ratio_bench(n_tokens=512, stripes=4)
+        prefill = run_prefill_bench(n_jobs=6, prefix_len=48)
+    else:
+        ratio = run_ratio_bench()
+        prefill = run_prefill_bench()
+
+    print("\n== context_ratio (carried vs context-free v6) ==")
+    print(f"corpus {ratio['n_tokens']} tokens / {ratio['n_chunks']} chunks: "
+          f"fresh {ratio['fresh_bytes']}B carried {ratio['carried_bytes']}B "
+          f"-> {ratio['ratio_gain']:.3f}x "
+          f"(floor {RATIO_FLOOR}x, "
+          f"{'ok' if ratio['gate_pass'] else 'FAIL'})")
+    print(f"prefix cache: {prefill['cache_hits']} hits / "
+          f"{prefill['cache_misses']} misses, "
+          f"{prefill['tokens_reused']} tokens reused; prefill steps "
+          f"{prefill['prefill_steps_off']} -> {prefill['prefill_steps_on']} "
+          f"= {prefill['prefill_savings']:.2f}x "
+          f"(floor {PREFILL_FLOOR}x, "
+          f"{'ok' if prefill['gate_pass'] else 'FAIL'})")
+    print(f"context_ratio,{ratio['t_carried_s'] * 1e6:.1f},"
+          f"gain={ratio['ratio_gain']:.3f};pass={ratio['gate_pass']}")
+    print(f"context_prefill,{prefill['wall_on_s'] * 1e6:.1f},"
+          f"savings={prefill['prefill_savings']:.2f};"
+          f"hits={prefill['cache_hits']};pass={prefill['gate_pass']}")
+    if not (ratio["gate_pass"] and prefill["gate_pass"]):
+        print("FAIL: context gate", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

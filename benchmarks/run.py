@@ -386,10 +386,40 @@ def router_routing(quick=False):
     return res
 
 
+def context_ratio(quick=False):
+    """DESIGN.md §12 gates: carried-context v6 archives must beat
+    context-free chunking by >= 1.10x on the order-K corpus, and the
+    radix prefix cache must cut shared-prefix prefill lane-steps by
+    >= 1.3x with byte-identical output. Full sweep + CLI gate live in
+    benchmarks/context_bench.py."""
+    from benchmarks.context_bench import run_prefill_bench, run_ratio_bench
+    t0 = time.time()
+    if quick:
+        ratio = run_ratio_bench(n_tokens=512)
+        prefill = run_prefill_bench(n_jobs=6, prefix_len=48)
+    else:
+        ratio = run_ratio_bench()
+        prefill = run_prefill_bench()
+    res = {"ratio": ratio, "prefill": prefill,
+           "gate_pass": ratio["gate_pass"] and prefill["gate_pass"]}
+    print("\n== context_ratio (carried v6 vs context-free; prefix cache) ==")
+    print(f"carried gain {ratio['ratio_gain']:.3f}x "
+          f"(floor {ratio['ratio_floor']}x) | prefill savings "
+          f"{prefill['prefill_savings']:.2f}x "
+          f"(floor {prefill['prefill_floor']}x, "
+          f"{prefill['cache_hits']} hits)")
+    _csv("context_ratio", (time.time() - t0) * 1e6,
+         f"gain={ratio['ratio_gain']:.3f};"
+         f"prefill_savings={prefill['prefill_savings']:.2f};"
+         f"cache_hits={prefill['cache_hits']};pass={res['gate_pass']}")
+    (RESULTS / "context_ratio.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
 ALL = [table2_information, table3_traditional, table5_main, fig_chunk_size,
        fig_model_size, fig_data_scale, fig9_human_vs_llm, fig8_domain_models,
        coder_throughput, service_throughput, decompress_throughput,
-       telemetry_overhead, router_routing]
+       telemetry_overhead, router_routing, context_ratio]
 
 
 def main() -> None:

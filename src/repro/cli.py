@@ -3,6 +3,7 @@
     llmc compress   IN OUT [--codec rans|ac] [--chunk N] [--topk K]
                            [--slots B] [--predictor NAME] [--v3]
                            [--route auto|llm|zstd|lzma|raw] [--sidecar]
+                           [--context-window W] [--shared-prefix FILE]
     llmc decompress IN OUT [--predictor NAME] [--sidecar]
     llmc range      IN OUT --chunks LO:HI [--predictor NAME]
     llmc info       IN
@@ -14,9 +15,15 @@ service (repro.service) and write/read v4 seekable containers by
 default; ``--route auto`` turns on adaptive per-chunk codec routing
 (DESIGN.md §11) and writes a v5 mixed-codec container whose index
 records each chunk's codec tag — decode follows the recorded tags, it
-never guesses. ``range`` random-access-decodes a chunk interval from a
-v4+ archive (mixed-codec v5 included); ``info`` prints header + index
-(and, for v5, the per-chunk codec tags) without loading any model.
+never guesses. ``--context-window``/``--shared-prefix`` write a v6
+container whose chunks are coded under declared context recipes
+(DESIGN.md §12) — the ratio lever of the paper's long-context regime.
+``range`` random-access-decodes a chunk interval from a v4+ archive
+(mixed-codec v5 and carried-context v6 included); ``info`` prints
+header + index (for v5 the per-chunk codec tags, for v6 also the
+context recipes and shared-prefix dictionary) without loading any
+model. All-fallback archives decompress and range-decode model-free:
+no predictor is ever constructed.
 
 ``stats`` (DESIGN.md §10) runs a small round-trip workload through a
 ``CompressionService`` and prints its telemetry snapshot — occupancy,
@@ -52,7 +59,7 @@ def _predictor(name: str):
 
 def _cmd_info(args) -> int:
     from repro.core import read_header, read_index
-    from repro.core.compressor import VERSION_V4, VERSION_V5
+    from repro.core.compressor import VERSION_V4, VERSION_V5, VERSION_V6
     blob = open(args.input, "rb").read()
     info = read_header(blob)
     print(f"{args.input}: LLMC v{info.version} codec={info.codec_name} "
@@ -62,19 +69,36 @@ def _cmd_info(args) -> int:
     if info.version >= VERSION_V4:
         info = read_index(blob, info)
         tagged = info.version >= VERSION_V5
-        cols = "offset, bytes, tokens, xxh64" + (", codec" if tagged else "")
-        print(f"index: footer verified; encode_batch={info.encode_batch}; "
-              f"per-chunk ({cols}):")
+        ctxed = info.version >= VERSION_V6
+        cols = "offset, bytes, tokens, xxh64" + (", codec" if tagged else "") \
+            + (", context" if ctxed else "")
+        budget = f" ctx_budget={info.ctx_budget};" if ctxed else ""
+        print(f"index: footer verified; encode_batch={info.encode_batch};"
+              f"{budget} per-chunk ({cols}):")
         for i, e in enumerate(info.entries):
             tag = f"  {e.codec_name}" if tagged else ""
+            rec = f"  {e.recipe_name}" if ctxed else ""
             print(f"  chunk {i:4d}: {e.offset:8d} {e.length:6d} "
-                  f"{e.n_tokens:5d} {e.checksum:016x}{tag}")
+                  f"{e.n_tokens:5d} {e.checksum:016x}{tag}{rec}")
         if tagged:
             counts = {}
             for e in info.entries:
                 counts[e.codec_name] = counts.get(e.codec_name, 0) + 1
             mix = "  ".join(f"{n}×{c}" for c, n in sorted(counts.items()))
             print(f"codecs: {mix}" if mix else "codecs: (empty)")
+        if ctxed:
+            rcounts = {}
+            for e in info.entries:
+                name = e.recipe_name.split("(")[0].split("[")[0]
+                rcounts[name] = rcounts.get(name, 0) + 1
+            mix = "  ".join(f"{n}×{r}" for r, n in sorted(rcounts.items()))
+            print(f"contexts: {mix}" if mix else "contexts: (empty)")
+            if info.shared_prefixes:
+                for j, (name, toks) in enumerate(info.shared_prefixes):
+                    print(f"shared prefix [{j}]: {name!r} "
+                          f"({len(toks)} tokens)")
+            else:
+                print("shared prefixes: none")
     else:
         print("index: none (v2/v3 container — no random access)")
     return 0
@@ -97,6 +121,9 @@ def _cmd_compress(args) -> int:
     pred = _predictor(args.predictor)
     data = open(args.input, "rb").read()
     toks = encode(data)
+    sp = None
+    if args.shared_prefix:
+        sp = encode(open(args.shared_prefix, "rb").read())
     t0 = time.time()
     handle = None
     if args.codec == "ac" or args.v3:
@@ -105,13 +132,18 @@ def _cmd_compress(args) -> int:
             # ac estimator path never routes — fail with a clear message
             raise SystemExit("llmc: --route requires the default service "
                              "path (rans codec, no --v3)")
+        if args.context_window or sp is not None:
+            raise SystemExit("llmc: context options need the default "
+                             "service path (rans codec, no --v3) — they "
+                             "write a v6 container")
         # legacy codec / wire-minimal container: grouped path
         comp = LLMCompressor(pred, chunk_size=args.chunk, topk=args.topk,
                              decode_batch=args.slots, codec=args.codec,
                              container_version=3 if args.v3 else 4)
         blob, stats = comp.compress(toks)
     else:
-        handle = _service(args, pred).submit_compress(toks)
+        handle = _service(args, pred).submit_compress(
+            toks, shared_prefix=sp, context_window=args.context_window)
         blob, stats = handle.result()
     open(args.output, "wb").write(blob)
     if args.sidecar:
@@ -130,13 +162,23 @@ def _cmd_compress(args) -> int:
 
 
 def _cmd_decompress(args) -> int:
-    from repro.core import LLMCompressor, read_header
+    from repro.core import (LLMCompressor, container_is_model_free,
+                            decompress_model_free, read_header)
     from repro.data.tokenizer import decode
     blob = open(args.input, "rb").read()
     info = read_header(blob)        # fail fast + learn the geometry
     if info.version >= 4:
         from repro.core import read_index
         info = read_index(blob, info)
+        if container_is_model_free(info):
+            # every chunk is fallback-coded: decode without constructing
+            # a predictor (no model load, no prefix cache, no service)
+            t0 = time.time()
+            toks = decompress_model_free(blob)
+            open(args.output, "wb").write(decode(toks))
+            print(f"{len(blob)}B -> decoded {toks.size} tokens "
+                  f"(model-free, {time.time() - t0:.1f}s)")
+            return 0
     pred = _predictor(args.predictor)
     args.chunk, args.topk = info.chunk_size, info.topk
     args.precision = info.precision
@@ -174,7 +216,8 @@ def _cmd_decompress(args) -> int:
 
 
 def _cmd_range(args) -> int:
-    from repro.core import ContainerError, LLMCompressor, read_index
+    from repro.core import (ContainerError, LLMCompressor,
+                            decompress_range_model_free, read_index)
     from repro.data.tokenizer import decode
     blob = open(args.input, "rb").read()
     info = read_index(blob)
@@ -183,6 +226,19 @@ def _cmd_range(args) -> int:
     except ValueError:
         raise SystemExit(f"llmc: --chunks expects LO:HI integers, "
                          f"got {args.chunks!r}")
+    if 0 <= lo < hi <= len(info.entries) \
+            and all(not e.is_llm for e in info.entries[lo:hi]):
+        # every requested chunk is fallback-coded (recipes are none by
+        # format law), so the range decodes without a model
+        t0 = time.time()
+        try:
+            toks = decompress_range_model_free(blob, lo, hi)
+        except ContainerError as e:
+            raise SystemExit(f"llmc: {e}")
+        open(args.output, "wb").write(decode(toks))
+        print(f"chunks [{lo}, {hi}) -> {toks.size} tokens "
+              f"(model-free, {time.time() - t0:.1f}s)")
+        return 0
     if args.slots and info.encode_batch and args.slots != info.encode_batch:
         print(f"llmc: note: range decode runs at the container's recorded "
               f"encode batch ({info.encode_batch}); --slots {args.slots} "
@@ -279,6 +335,14 @@ def main(argv=None) -> int:
     p.add_argument("--sidecar", action="store_true",
                    help="write per-chunk diagnostics (bits/token, "
                         "escapes) to OUT.diag.json")
+    p.add_argument("--context-window", type=int, default=0, metavar="W",
+                   help="carry each chunk's W-token tail into the next "
+                        "chunk of its stripe (writes a v6 container with "
+                        "per-chunk context recipes, DESIGN.md §12)")
+    p.add_argument("--shared-prefix", default="", metavar="FILE",
+                   help="condition stripe-head chunks on FILE's tokens "
+                        "as a named shared prefix (v6; jobs sharing the "
+                        "prefix reuse one prefilled KV state)")
     p.set_defaults(fn=_cmd_compress)
 
     p = sub.add_parser("decompress", help=".llmc container -> file")

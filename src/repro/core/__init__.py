@@ -7,10 +7,15 @@ from .cdf import (coding_cost_bits, logits_to_cdf, pmf_to_cdf,
                   quantize_pmf, topk_quantized)
 from .checksum import xxh64
 from .compressor import (CODEC_IDS, CODEC_NAMES, FALLBACK_CODEC_IDS,
-                         VERSION_V3, VERSION_V4, VERSION_V5, ChunkEntry,
-                         CompressionStats, ContainerError, ContainerInfo,
-                         LLMCompressor, PredictorAdapter, parse_container,
-                         read_header, read_index, write_container)
+                         RECIPE_CARRY, RECIPE_NONE, RECIPE_SHARED,
+                         VERSION_V3, VERSION_V4, VERSION_V5, VERSION_V6,
+                         ChunkEntry, CompressionStats, ContainerError,
+                         ContainerInfo, LLMCompressor, PredictorAdapter,
+                         assign_context_recipes, container_is_model_free,
+                         context_budget,
+                         decompress_model_free, decompress_range_model_free,
+                         parse_container, read_header, read_index,
+                         recipe_context, write_container)
 from .draft import ConstantDraft, DraftProposer, OracleDraft, SuffixDraft
 from .rans import BatchedRansDecoder, BatchedRansEncoder, SlotRansEncoder
 from .router import (ROUTE_AUTO, ROUTE_LLM, CodecRouter, RouteDecision,
@@ -24,9 +29,14 @@ __all__ = [
     "coding_cost_bits", "logits_to_cdf", "pmf_to_cdf", "quantize_pmf",
     "topk_quantized", "xxh64",
     "CODEC_IDS", "CODEC_NAMES", "FALLBACK_CODEC_IDS",
-    "VERSION_V3", "VERSION_V4", "VERSION_V5",
+    "RECIPE_CARRY", "RECIPE_NONE", "RECIPE_SHARED",
+    "VERSION_V3", "VERSION_V4", "VERSION_V5", "VERSION_V6",
     "ChunkEntry", "CompressionStats", "ContainerError", "ContainerInfo",
     "LLMCompressor", "PredictorAdapter",
+    "assign_context_recipes", "container_is_model_free",
+    "context_budget",
+    "decompress_model_free", "decompress_range_model_free",
+    "recipe_context",
     "ConstantDraft", "DraftProposer", "OracleDraft", "SuffixDraft",
     "ROUTE_AUTO", "ROUTE_LLM", "CodecRouter", "RouteDecision",
     "RouterConfig", "pack_tokens", "unpack_tokens",

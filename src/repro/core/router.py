@@ -96,14 +96,31 @@ class RouterConfig:
     * ``probe_tokens`` — positions of early cross-entropy the probe
       scores before deciding whether a chunk enters the model batch.
     * ``skip_margin`` — the LLM path is skipped only when its estimated
-      bits exceed ``skip_margin ×`` the fallback's realized bits. > 1 is
+      bits exceed ``margin ×`` the fallback's realized bits, where
+      ``margin`` starts at ``skip_margin`` and — with
+      ``adaptive_margin`` — is updated per traffic class from
+      probe-vs-realized history (see ``CodecRouter.observe``). > 1 is
       conservative: a borderline chunk still gets the LLM encode plus
       the final realized-size comparison, so probe noise costs model
       time, not ratio.
+    * ``adaptive_margin`` / ``margin_floor`` / ``margin_ceil`` /
+      ``margin_alpha`` — the calibration loop: when realized LLM bits
+      run hotter than the probe estimated (the probe flatters the
+      model — adversarial traffic whose tail degrades after the probed
+      prefix), the effective margin shrinks toward ``margin_floor`` so
+      such chunks skip sooner; when realized bits run cooler
+      (predictable traffic the early-CE probe under-credits), it grows
+      toward ``margin_ceil``. ``margin_alpha`` is the EMA step. The
+      floor is a safety clamp: the margin never drops below it, so a
+      burst of bad luck cannot lock the router out of the LLM path.
     """
     fallbacks: tuple | None = None
     probe_tokens: int = 32
     skip_margin: float = 1.25
+    adaptive_margin: bool = True
+    margin_floor: float = 1.05
+    margin_ceil: float = 2.0
+    margin_alpha: float = 0.25
 
 
 @dataclass
@@ -117,10 +134,63 @@ class RouteDecision:
 
 
 class CodecRouter:
-    """Per-chunk codec selection policy. Stateless across chunks."""
+    """Per-chunk codec selection policy.
+
+    Decisions are per-chunk and order-independent, but the router keeps
+    one piece of *calibration* state: a per-traffic-class EMA of the
+    realized-vs-estimated LLM bit ratio, fed by ``observe`` after each
+    LLM encode and consumed by ``margin_for``. Calibration only tunes
+    the probe's skip threshold — it can cost model time, never
+    correctness (the final realized-size flip still runs on every
+    LLM-encoded chunk, and decode follows the recorded tags)."""
 
     def __init__(self, config: RouterConfig | None = None):
         self.config = config or RouterConfig()
+        # traffic class -> EMA of (realized llm bits / probe estimate)
+        self._calibration: dict[str, float] = {}
+
+    @staticmethod
+    def traffic_class(est_bits: float, fallback_bytes: int) -> str:
+        """Coarse traffic class from the probe's own signals: how the
+        estimated LLM cost compares to the realized fallback. Classes
+        keep calibration from mixing regimes — the probe's bias on
+        model-friendly text says nothing about its bias on adversarial
+        bytes."""
+        fb_bits = 8.0 * max(1, fallback_bytes)
+        r = est_bits / fb_bits
+        if r < 0.75:
+            return "predictable"
+        if r < 1.5:
+            return "borderline"
+        return "adversarial"
+
+    def margin_for(self, cls: str) -> float:
+        """Effective skip margin for a traffic class: the configured
+        ``skip_margin`` divided by the class's realized/estimated ratio
+        (estimates running hot shrink the margin — skip sooner),
+        clamped to [margin_floor, margin_ceil]."""
+        cfg = self.config
+        rho = self._calibration.get(cls)
+        if not cfg.adaptive_margin or rho is None:
+            return cfg.skip_margin
+        return float(np.clip(cfg.skip_margin / rho, cfg.margin_floor,
+                             cfg.margin_ceil))
+
+    def observe(self, est_bits: float, llm_bits: float,
+                fallback_bytes: int) -> None:
+        """Feed one probe-vs-realized observation (an LLM-encoded
+        chunk's probe estimate and realized code length) into the
+        class's calibration EMA. Chunks that skipped the model have no
+        realized LLM size and are never observed — the estimate is the
+        only thing being calibrated."""
+        if est_bits <= 0 or llm_bits <= 0:
+            return
+        cls = self.traffic_class(est_bits, fallback_bytes)
+        rho = llm_bits / est_bits
+        old = self._calibration.get(cls)
+        a = self.config.margin_alpha
+        self._calibration[cls] = rho if old is None \
+            else (1.0 - a) * old + a * rho
 
     def fallback_candidates(self) -> list[str]:
         """Usable fallback codec names, honouring the configured
@@ -152,10 +222,11 @@ class CodecRouter:
 
     def skip_llm(self, est_bits: float, fallback_stream: bytes) -> bool:
         """True when the probe estimate says the LLM path would lose by
-        more than the safety margin — the chunk then skips the model
-        entirely (the service never gives it a slot)."""
-        return est_bits > self.config.skip_margin * 8.0 * len(
-            fallback_stream)
+        more than the (class-calibrated) safety margin — the chunk then
+        skips the model entirely (the service never gives it a slot)."""
+        margin = self.margin_for(
+            self.traffic_class(est_bits, len(fallback_stream)))
+        return est_bits > margin * 8.0 * len(fallback_stream)
 
     @staticmethod
     def decode_fallback(codec_name: str, stream: bytes, n_tokens: int,

@@ -44,6 +44,7 @@ class ChunkDiagnostics:
     draft_accepted: int = 0      # drafted tokens accepted (bonus yield)
     rollbacks: int = 0
     codec: str = ""              # per-chunk codec name (v5 routing)
+    context: str = ""            # context recipe, e.g. "carry(64)" (v6)
 
     @property
     def bits_per_token(self) -> float:
@@ -62,6 +63,10 @@ class ChunkDiagnostics:
 
     def to_dict(self) -> dict:
         d = asdict(self)
+        if not d["context"]:
+            # context is a v6-only concept; keep v2-v5 sidecars
+            # byte-identical to their pre-v6 form
+            del d["context"]
         d["bits_per_token"] = round(self.bits_per_token, 4)
         d["cross_entropy"] = round(self.cross_entropy, 4)
         d["escape_rate"] = round(self.escape_rate, 5)

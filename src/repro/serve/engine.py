@@ -65,6 +65,39 @@ class ModelPredictor:
                 return logits[..., :cfg.vocab_size], cache
 
         @jax.jit
+        def _score_ctx(params, tokens, prefix, extra):
+            with jax.named_scope("model_score_prefix"):
+                inp = jnp.concatenate(
+                    [jnp.full((tokens.shape[0], 1), self.bos_id,
+                              tokens.dtype),
+                     prefix, tokens[:, :-1]], axis=1)
+                batch = {"tokens": inp, **extra}
+                logits = model_api.forward(params, cfg, batch, **fam_kw)
+                return logits[:, prefix.shape[1]:, :cfg.vocab_size]
+
+        @jax.jit
+        def _prefill(params, cache, prefix, extra):
+            """Consume [BOS, prefix[:, :-1]] through the decode-step
+            program in one dispatch. Each scanned step IS the lock-step
+            decoder's own jitted computation (same program, same reduction
+            order — the _verify argument), so the resulting cache is
+            bit-identical to P sequential decode_step calls. The caller
+            then feeds prefix[:, -1] as the first decode input."""
+            del extra
+            inp = jnp.concatenate(
+                [jnp.full((prefix.shape[0], 1), self.bos_id, prefix.dtype),
+                 prefix[:, :-1]], axis=1)
+
+            def step(c, tok):
+                with jax.named_scope("model_prefill_step"):
+                    _, c2 = model_api.decode_step(params, cfg, c, tok,
+                                                  **fam_kw)
+                    return c2, None
+
+            cache, _ = jax.lax.scan(step, cache, jnp.swapaxes(inp, 0, 1))
+            return cache
+
+        @jax.jit
         def _verify(params, cache, seq, extra):
             """Score T = seq.shape[1] positions in ONE dispatch by scanning
             the decode-step program, emitting the post-step cache after
@@ -111,6 +144,40 @@ class ModelPredictor:
             return jax.tree_util.tree_map_with_path(leaf, snaps)
 
         @jax.jit
+        def _snapshot(cache, lane):
+            """Copy one cache lane out as a standalone snapshot (the radix
+            prefix cache's stored value). Leaves are (L, B, ...) batch-
+            axis-1 except 'pos' (B,); encdec cross-attn conditioning
+            (xk/xv) is per-job, not per-slot context, so it stays whole
+            and restore leaves the target's own value in place."""
+            def leaf(path, x):
+                name = path[-1].key if hasattr(path[-1], "key") else ""
+                if name in ("xk", "xv"):
+                    return x
+                if name == "pos":
+                    return x[lane]
+                return jnp.take(x, lane, axis=1)
+            return jax.tree_util.tree_map_with_path(leaf, cache)
+
+        @jax.jit
+        def _restore(cache, snap, mask):
+            """Broadcast a single-lane snapshot into every cache lane
+            selected by mask (B,) bool — the prefix-cache-hit path: the
+            slot resumes from the stored post-prefill state instead of
+            re-running prefill. Runtime mask, no recompilation."""
+            def leaf(path, x, s):
+                name = path[-1].key if hasattr(path[-1], "key") else ""
+                if name in ("xk", "xv"):
+                    return x
+                if name == "pos":
+                    return jnp.where(mask, s, x).astype(x.dtype)
+                shape = [1] * x.ndim
+                shape[1] = mask.shape[0]
+                return jnp.where(mask.reshape(shape),
+                                 jnp.expand_dims(s, 1), x)
+            return jax.tree_util.tree_map_with_path(leaf, cache, snap)
+
+        @jax.jit
         def _reset(cache, mask):
             """Zero the cache lanes selected by mask (B,) bool — per-slot
             fresh context for the continuous-batching scheduler. 'pos'
@@ -133,19 +200,38 @@ class ModelPredictor:
             return jax.tree_util.tree_map_with_path(leaf, cache)
 
         self._score = _score
+        self._score_ctx = _score_ctx
+        self._prefill = _prefill
         self._decode = _decode
         self._verify = _verify
         self._rollback = _rollback
+        self._snapshot = _snapshot
+        self._restore = _restore
         self._reset = _reset
 
     # --------------------------------------------------- PredictorAdapter
-    def score_chunks(self, tokens: np.ndarray) -> np.ndarray:
+    def score_chunks(self, tokens: np.ndarray,
+                     prefix: np.ndarray | None = None) -> np.ndarray:
+        """Teacher-forced logits for (B, C) chunks. With ``prefix``
+        (B, P) or (P,), position t is scored given [prefix, x_<t] instead
+        of a fresh context — the v6 carried/shared-context scorer."""
         with obs.span("model.score"):
             tokens = jnp.asarray(tokens, jnp.int32)
-            return np.asarray(
-                self._score(self.params, tokens, self.extra_batch))
+            if prefix is None:
+                return np.asarray(
+                    self._score(self.params, tokens, self.extra_batch))
+            prefix = jnp.asarray(prefix, jnp.int32)
+            if prefix.ndim == 1:
+                prefix = jnp.broadcast_to(
+                    prefix[None], (tokens.shape[0], prefix.shape[0]))
+            return np.asarray(self._score_ctx(self.params, tokens, prefix,
+                                              self.extra_batch))
 
-    def begin_decode(self, batch: int):
+    def begin_decode(self, batch: int, prefix: np.ndarray | None = None):
+        """Fresh decode cache for ``batch`` lanes. With ``prefix`` (B, P)
+        or (P,), the cache has consumed [BOS, prefix[:, :-1]] in one
+        scanned dispatch (bit-identical to sequential decode_step calls);
+        the caller feeds prefix[:, -1] as the first decode_step input."""
         max_len = getattr(self, "_decode_max_len", 1024)
         cache = model_api.init_cache(self.cfg, batch, max_len)
         if self.cfg.family == "encdec" and "frames" in self.extra_batch:
@@ -156,6 +242,14 @@ class ModelPredictor:
                     frames[:1], (batch,) + frames.shape[1:])
             cache["xk"], cache["xv"] = precompute_cross_kv(
                 self.params, self.cfg, frames)
+        if prefix is not None:
+            prefix = jnp.asarray(prefix, jnp.int32)
+            if prefix.ndim == 1:
+                prefix = jnp.broadcast_to(prefix[None],
+                                          (batch, prefix.shape[0]))
+            with obs.span("model.prefill"):
+                cache = self._prefill(self.params, cache, prefix,
+                                      self.extra_batch)
         return cache
 
     def set_decode_len(self, n: int):
@@ -188,6 +282,20 @@ class ModelPredictor:
         with obs.span("model.rollback"):
             return self._rollback(snapshots,
                                   jnp.asarray(accepted, jnp.int32))
+
+    def snapshot_slot(self, state, lane: int):
+        """Copy cache lane ``lane`` out as a standalone snapshot — the
+        value a radix prefix cache stores for a prefilled shared prefix.
+        One jitted gather; the live cache is untouched."""
+        with obs.span("model.snapshot_slot"):
+            return self._snapshot(state, jnp.asarray(lane, jnp.int32))
+
+    def restore_slot(self, state, snapshot, mask: np.ndarray):
+        """Broadcast ``snapshot`` (from snapshot_slot) into every cache
+        lane selected by ``mask`` (B,) bool — the prefix-cache-hit path
+        that replaces re-prefilling those lanes. One jitted select."""
+        with obs.span("model.restore_slot"):
+            return self._restore(state, snapshot, jnp.asarray(mask, bool))
 
     def reset_slots(self, state, mask: np.ndarray):
         """Reset the cache lanes selected by ``mask`` (B,) bool to a fresh

@@ -112,6 +112,48 @@ def make_score_step(cfg: ModelConfig, mesh=None, *, topk: int = 64,
     )
 
 
+def make_prefill_step(cfg: ModelConfig, mesh=None, *, batch: int,
+                      donate: bool = True):
+    """Prefix prefill for the carried/shared-context decoder (v6):
+    (params, cache, prefix (B, P)) -> cache that has consumed
+    [BOS, prefix[:, :-1]] — the caller feeds prefix[:, -1] as the first
+    serve_step input. The scan body IS the decode-step program (same
+    reduction order), so the cache is bit-identical to P sequential
+    serve_step calls — the lossless requirement for context reuse. One
+    dispatch per prefix length; the radix prefix cache in the service
+    layer amortizes it across jobs sharing the prefix."""
+    fam_kw = _fam_kw(cfg, mesh)
+
+    def prefill_step(params, cache, prefix):
+        from repro.models.layers import mesh_context
+        with mesh_context(mesh, layout="serve"):
+            inp = jnp.concatenate(
+                [jnp.full((prefix.shape[0], 1),
+                          cfg.vocab_size - 1, prefix.dtype),
+                 prefix[:, :-1]], axis=1)
+
+            def step(c, tok):
+                _, c2 = model_api.decode_step(params, cfg, c, tok, **fam_kw)
+                return c2, None
+
+            cache, _ = jax.lax.scan(step, cache, jnp.swapaxes(inp, 0, 1))
+            return cache
+
+    if mesh is None:
+        return jax.jit(prefill_step, donate_argnums=(1,) if donate else ())
+    sh = lambda s: NamedSharding(mesh, s)
+    pspecs = jax.tree_util.tree_map(
+        sh, param_pspecs(cfg, mesh, layout="serve"))
+    cspecs = jax.tree_util.tree_map(sh, cache_pspecs(cfg, mesh, batch=batch))
+    bspec = batch_pspecs(cfg, mesh, global_batch=batch)["tokens"][0]
+    return jax.jit(
+        prefill_step,
+        in_shardings=(pspecs, cspecs, sh(P(bspec, None))),
+        out_shardings=cspecs,
+        donate_argnums=(1,) if donate else (),
+    )
+
+
 def make_serve_step(cfg: ModelConfig, mesh=None, *, batch: int,
                     topk: int = 64, precision: int = 16,
                     donate: bool = True, sharded_topk: bool = True):

@@ -17,11 +17,16 @@ format (§5.4) makes safe and that the per-slot cache positions
     tokens_c = h3.result()
 
 Containers written by the service are version 4 (seekable index footer +
-xxh64 checksums); it decodes v2/v3/v4 archives from any writer.
+xxh64 checksums), v5 with routing, or v6 when a job declares context
+(``submit_compress(shared_prefix=..., context_window=W)``); it decodes
+v2–v6 archives from any writer. Shared-prefix jobs reuse one prefilled
+KV prefix through a radix prefix cache (``RadixPrefixCache``).
 """
 from .api import CompressionService, ServiceError
+from .prefix_cache import RadixPrefixCache
 from .scheduler import SchedulerStats, SlotScheduler
 from .session import ChunkTask, Job, JobHandle
 
 __all__ = ["CompressionService", "ServiceError", "SlotScheduler",
-           "SchedulerStats", "ChunkTask", "Job", "JobHandle"]
+           "SchedulerStats", "ChunkTask", "Job", "JobHandle",
+           "RadixPrefixCache"]

@@ -17,11 +17,20 @@ slot, so unpredictable traffic stops costing model steps. Chunks that do
 enter the batch still flip to their fallback at completion if the
 fallback stream turned out smaller (``SlotScheduler._finish_slot``).
 
-Reads v2–v5; legacy AC-codec containers (and all v2 archives) cannot
+Context (v6, DESIGN.md §12): ``submit_compress(shared_prefix=...,
+context_window=W)`` upgrades the job's container to v6 with per-chunk
+context recipes. Shared prefixes prefill once per slot wave and are
+snapshotted into a radix prefix cache (``service.prefix_cache``), so
+jobs sharing a system prompt/template reuse one prefilled KV prefix —
+``prefix_cache.hits``/``misses``/``evictions`` count the reuse.
+
+Reads v2–v6; legacy AC-codec containers (and all v2 archives) cannot
 ride the interleaved-rANS slot machine, so they are decoded eagerly at
-submit time through the grouped path — same result, no await needed.
-Fallback-tagged v5 chunks similarly decode eagerly at submit (they need
-no model); only the LLM-tagged chunks are queued.
+submit time through the grouped path — same result, no await needed;
+v6 archives with carried/shared recipes take the same eager grouped
+path (carry chains need in-order predecessors, not out-of-order slots).
+Fallback-tagged v5/v6 chunks similarly decode eagerly at submit (they
+need no model); only the LLM-tagged chunks are queued.
 AC archives above the rANS precision cap can't construct a matching
 service at all (the cap guards the service's own rANS coding) — decode
 those through ``LLMCompressor`` directly, as the ``llmc`` CLI does.
@@ -34,15 +43,18 @@ from repro import obs
 from repro.core import rans
 from repro.core.cdf import DEFAULT_PRECISION
 from repro.core.compressor import (CODEC_AC, CODEC_RANS,
-                                   FALLBACK_CODEC_IDS, VERSION_V4,
-                                   VERSION_V5, CompressionStats,
+                                   FALLBACK_CODEC_IDS, RECIPE_NONE,
+                                   RECIPE_SHARED, VERSION_V4, VERSION_V5,
+                                   VERSION_V6, CompressionStats,
                                    ContainerError, LLMCompressor,
-                                   check_container_config,
+                                   assign_context_recipes,
+                                   check_container_config, context_budget,
                                    chunk_valid_lengths, parse_container,
-                                   write_container)
+                                   recipe_context, write_container)
 from repro.core.router import (ROUTE_AUTO, ROUTE_LLM, CodecRouter,
                                RouterConfig, route_chunks)
 from repro.obs import MetricsRegistry
+from .prefix_cache import RadixPrefixCache
 from .scheduler import SlotScheduler
 from .session import COMPRESS, DECOMPRESS, ChunkTask, Job, JobHandle
 
@@ -85,7 +97,8 @@ class CompressionService:
                  container_version: int | None = None,
                  route: str = ROUTE_LLM,
                  router: CodecRouter | RouterConfig | None = None,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None,
+                 prefix_cache_tokens: int = 1 << 16):
         if topk and topk >= predictor.vocab_size:
             topk = 0
         if (1 << precision) <= (topk + 1 if topk else predictor.vocab_size):
@@ -101,10 +114,10 @@ class CompressionService:
         if container_version is None:
             container_version = VERSION_V4 if route == ROUTE_LLM \
                 else VERSION_V5
-        if route != ROUTE_LLM and container_version != VERSION_V5:
+        if route != ROUTE_LLM and container_version < VERSION_V5:
             raise ValueError(
-                f"route={route!r} requires a v5 container (per-chunk codec "
-                f"tags); cannot write v{container_version}")
+                f"route={route!r} requires a v5+ container (per-chunk "
+                f"codec tags); cannot write v{container_version}")
         self.route = route
         if isinstance(router, CodecRouter):
             self.router = router
@@ -125,47 +138,100 @@ class CompressionService:
         # obs.registry() to aggregate into the process-global view.
         self.registry = registry if registry is not None \
             else MetricsRegistry(name="service")
+        # shared-prefix KV reuse across jobs (v6): only touched when a
+        # submit declares a cacheable context — model-free traffic and
+        # plain v4/v5 jobs never reach it
+        self.prefix_cache = RadixPrefixCache(
+            capacity_tokens=int(prefix_cache_tokens),
+            registry=self.registry)
         self.scheduler = SlotScheduler(predictor, n_slots=self.slots,
                                        chunk_size=self.chunk_size,
                                        topk=self.topk,
                                        precision=self.precision,
-                                       registry=self.registry)
+                                       registry=self.registry,
+                                       prefix_cache=self.prefix_cache,
+                                       router=self.router)
         self._next_job = 0
         self._legacy: LLMCompressor | None = None
         self._stats = ServiceStats(self)
 
     # ------------------------------------------------------------- submit
-    def submit_compress(self, tokens, *, priority: int = 0) -> JobHandle:
+    def submit_compress(self, tokens, *, priority: int = 0,
+                        shared_prefix=None,
+                        context_window: int = 0) -> JobHandle:
         """Queue a token stream for compression into a v4 container
-        (v5 with per-chunk codec tags when routing is enabled)."""
+        (v5 with per-chunk codec tags when routing is enabled).
+
+        Context (v6): ``shared_prefix`` conditions every stripe-head
+        chunk on the given token prefix (the radix prefix cache makes
+        jobs sharing it pay its prefill once), ``context_window=W``
+        carries each previous chunk's W-token tail into the next chunk
+        of the stripe. Either option upgrades this job's container to
+        v6 — the recipes ride in the index footer so any decoder can
+        rematerialize the same context."""
         tokens = np.asarray(tokens, np.int32).ravel()
         n = int(tokens.size)
         C = self.chunk_size
         n_chunks = -(-n // C)            # 0 tokens => 0 chunks
 
-        decisions = fb = None
-        if self.route != ROUTE_LLM and n_chunks:
+        sp = None
+        if shared_prefix is not None:
+            sp = np.asarray(shared_prefix, np.int32).ravel()
+            if sp.size == 0:
+                sp = None
+        ctx_on = sp is not None or context_window > 0
+        version = max(self.container_version, VERSION_V6) if ctx_on \
+            else self.container_version
+        recipes = None
+        chunks2d = valids = None
+        if n_chunks:
             padded = np.zeros(n_chunks * C, np.int32)
             padded[:n] = tokens
+            chunks2d = padded.reshape(n_chunks, C)
+            valids = chunk_valid_lengths(n, C)
+        ctx_budget = 0
+        if ctx_on and n_chunks:
+            # one stripe per slot: carry chains decode round-robin across
+            # the recorded lane count, so carry never serializes decode
+            recipes = assign_context_recipes(
+                n_chunks, context_window=int(context_window),
+                stripes=min(self.slots, n_chunks), shared=sp is not None)
+            # job-wide decode-length geometry, recorded in the v6 footer:
+            # every chunk of the job — context-free heads included — runs
+            # the model program at chunk_size + ctx_budget positions
+            ctx_budget = context_budget(
+                recipes, valids, [("shared", sp)] if sp is not None else [])
+
+        decisions = fb = None
+        if self.route != ROUTE_LLM and n_chunks:
             decisions, fb = route_chunks(
-                self.router, self.predictor, padded.reshape(n_chunks, C),
-                chunk_valid_lengths(n, C), "rans",
-                auto=self.route == ROUTE_AUTO)
+                self.router, self.predictor, chunks2d,
+                valids, "rans", auto=self.route == ROUTE_AUTO)
+
+        sp_list = [("shared", sp)] if sp is not None else []
 
         def assemble(streams: list[bytes]):
             tags = None
-            if self.container_version == VERSION_V5:
+            if version >= VERSION_V5:
                 # late-bound through the job: fallback codec names were
                 # recorded per chunk as completions arrived
                 tags = [FALLBACK_CODEC_IDS.get(job._codecs.get(i),
                                                CODEC_RANS)
                         for i in range(n_chunks)]
+            rec = None
+            if version >= VERSION_V6 and recipes is not None:
+                # fallback chunks are context-free by format law: zero the
+                # recipe wherever the router (or a flip) won the chunk
+                rec = [(RECIPE_NONE, 0) if i in job._codecs else recipes[i]
+                       for i in range(n_chunks)]
             blob = write_container(
-                streams, version=self.container_version, chunk_size=C,
+                streams, version=version, chunk_size=C,
                 n_tokens=n, vocab=self.predictor.vocab_size,
                 topk=self.topk, precision=self.precision,
                 codec_id=CODEC_RANS, encode_batch=self.slots,
-                codec_tags=tags)
+                codec_tags=tags, recipes=rec,
+                shared_prefixes=sp_list if rec is not None else None,
+                ctx_budget=ctx_budget)
             payload = sum(len(s) for s in streams)
             return blob, CompressionStats(
                 n_tokens=n, payload_bytes=payload,
@@ -198,9 +264,18 @@ class CompressionService:
                         coded_bits=8.0 * len(stream), codec=name)
                 job._chunk_done(i, stream, diag, codec=name)
                 continue
-            task = ChunkTask(job, i, COMPRESS, valid, tokens=tokens[lo:hi])
+            task = ChunkTask(job, i, COMPRESS, valid, tokens=tokens[lo:hi],
+                             ctx_budget=ctx_budget)
             if decisions is not None:
                 task.fallback, task.fallback_codec = fb[i][1], fb[i][0]
+                task.llm_bits_est = decisions[i].llm_bits_est
+            if recipes is not None and recipes[i][0] != RECIPE_NONE:
+                task.recipe = recipes[i]
+                # same materialization the v6 decoder will use, so the
+                # encode-side context cannot drift from the format's
+                task.ctx = recipe_context(recipes, chunks2d, valids, i,
+                                          sp_list)
+                task.cacheable = recipes[i][0] == RECIPE_SHARED
             self.scheduler.submit(task, priority)
         return JobHandle(job, self)
 
@@ -245,8 +320,15 @@ class CompressionService:
         if info.n_chunks == 0:
             job.resolve(np.zeros(0, np.int32))   # valid empty container
             return JobHandle(job, self)
-        if info.codec == CODEC_AC:
-            # legacy codec: grouped lock-step decode, resolved eagerly
+        carried = any(e.recipe_kind != RECIPE_NONE for e in info.entries)
+        if info.codec == CODEC_AC or carried:
+            # legacy codec, or v6 carried context: grouped lock-step
+            # decode, resolved eagerly. Carried chunks need their
+            # predecessors' tokens before they can decode — that ordering
+            # is the grouped decoder's chain scheduling, not the slot
+            # machine's out-of-order refill. (An all-fallback v6 archive
+            # has every recipe zeroed by format law, so it never lands
+            # here and stays model-free below.)
             job.resolve(self._legacy_compressor().decompress(blob))
             return JobHandle(job, self)
         for i, (stream, entry) in enumerate(zip(streams, info.entries)):
@@ -260,7 +342,8 @@ class CompressionService:
                 continue
             self.scheduler.submit(
                 ChunkTask(job, i, DECOMPRESS, entry.n_tokens,
-                          stream=stream),
+                          stream=stream,
+                          ctx_budget=getattr(info, "ctx_budget", 0)),
                 priority)
         return JobHandle(job, self)
 
@@ -311,6 +394,14 @@ class CompressionService:
             },
             "chunk_bits_per_token": bpt,
             "draft_acceptance": (acc / offered) if offered else None,
+            "prefix_cache": {
+                "hits": reg.value("prefix_cache.hits"),
+                "misses": reg.value("prefix_cache.misses"),
+                "evictions": reg.value("prefix_cache.evictions"),
+                "tokens_reused": reg.value("prefix_cache.tokens_reused"),
+                "entries": len(self.prefix_cache),
+                "size_tokens": self.prefix_cache.size_tokens,
+            },
             "metrics": reg.snapshot(),
         }
 

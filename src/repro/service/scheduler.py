@@ -58,6 +58,7 @@ _HELP = {
     "refills": "slot assignments from the queue",
     "chunk_failures": "chunk tasks that completed with an error",
     "escapes": "escape symbols coded (top-k mode, both directions)",
+    "prefill_steps": "lane-steps spent consuming context prefixes (v6)",
 }
 
 
@@ -97,6 +98,7 @@ class SchedulerStats:
     refills = _CounterField("refills")
     chunk_failures = _CounterField("chunk_failures")
     escapes = _CounterField("escapes")
+    prefill_steps = _CounterField("prefill_steps")
 
     def __init__(self, registry: MetricsRegistry | None = None):
         self.registry = registry if registry is not None \
@@ -151,7 +153,8 @@ class SlotScheduler:
 
     def __init__(self, predictor, *, n_slots: int, chunk_size: int,
                  topk: int = 0, precision: int = DEFAULT_PRECISION,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None,
+                 prefix_cache=None, router=None):
         if not 0 < precision <= rans.MAX_PRECISION:
             raise ValueError(f"precision {precision} outside rANS range "
                              f"(1..{rans.MAX_PRECISION})")
@@ -191,6 +194,22 @@ class SlotScheduler:
         self._enc = rans.SlotRansEncoder(B)
         self._state = None              # model decode state, created lazily
         self._used = np.zeros(B, bool)  # lanes that have held a chunk
+        # v6 context prefill: a slot whose _cpos < _ctxlen is consuming its
+        # context prefix — it takes a model step but is excluded from both
+        # coder masks; _ctx holds the per-slot context tokens and _cachekey
+        # the prefix to snapshot into the radix cache once prefill ends
+        self.prefix_cache = prefix_cache
+        self.router = router            # probe-vs-realized calibration sink
+        self._ctx: list = [None] * B
+        self._ctxlen = np.zeros(B, np.int64)
+        self._cpos = np.zeros(B, np.int64)
+        self._cachekey: list = [None] * B
+        # decode-length geometry the model state was built for: every
+        # lane runs at chunk_size + _ctx_budget positions. Cache length
+        # is coding geometry (it changes the jitted program's logits
+        # bitwise), so this must equal each job's recorded ctx_budget
+        # exactly — not merely bound it
+        self._ctx_budget = 0
         self.registry = registry if registry is not None \
             else MetricsRegistry(name="scheduler")
         self.stats = SchedulerStats(self.registry)
@@ -203,6 +222,7 @@ class SlotScheduler:
         self._c_refills = self.registry.counter("scheduler.refills")
         self._c_failures = self.registry.counter("scheduler.chunk_failures")
         self._c_escapes = self.registry.counter("scheduler.escapes")
+        self._c_prefill = self.registry.counter("scheduler.prefill_steps")
         self._h_bpt = self.registry.histogram(
             "chunk.bits_per_token", "realized payload bits/token per chunk")
         self._h_step = self.registry.histogram(
@@ -235,6 +255,26 @@ class SlotScheduler:
             task.complete(b"" if task.kind == COMPRESS
                           else np.zeros(0, np.int32))
             return
+        need = int(getattr(task, "ctx_budget", 0))
+        if need != self._ctx_budget:
+            # geometry change: rebuild the model state while fully idle
+            # (queued work counts as busy — its chunks must encode at the
+            # geometry they were submitted under), never mid-flight
+            if self._state is not None:
+                if self._active.any() or self._queue:
+                    raise ValueError(
+                        f"task needs context budget {need} but the decode "
+                        f"state runs at {self._ctx_budget} with work in "
+                        f"flight; drain before mixing context geometries")
+                self._state = None
+                if self.prefix_cache is not None:
+                    self.prefix_cache.clear()   # snapshots shape-mismatch
+            self._ctx_budget = need
+        ctx = getattr(task, "ctx", None)
+        if ctx is not None and ctx.size > need:
+            raise ValueError(
+                f"chunk {task.chunk_index}: context of {ctx.size} tokens "
+                f"exceeds the job's declared budget ({need})")
         if task.kind != COMPRESS and len(task.stream) < rans._STATE_BYTES:
             # any chunk that coded >= 1 token carries at least the coder
             # state flush; shorter means a corrupt length varint — fail at
@@ -254,7 +294,7 @@ class SlotScheduler:
     def _ensure_state(self):
         if self._state is None:
             if hasattr(self.predictor, "set_decode_len"):
-                self.predictor.set_decode_len(self.C)
+                self.predictor.set_decode_len(self.C + self._ctx_budget)
             self._state = self.predictor.begin_decode(self.B)
 
     def _refill(self) -> None:
@@ -265,6 +305,7 @@ class SlotScheduler:
             return
         mask = np.zeros(self.B, bool)
         bos = getattr(self.predictor, "bos_id")
+        restores: list[tuple[int, object]] = []
         for b in free:
             if not self._queue:
                 break
@@ -276,6 +317,28 @@ class SlotScheduler:
             self._valid[b] = task.valid
             self._prev[b] = bos
             self._nesc[b] = 0
+            self._ctx[b] = None
+            self._ctxlen[b] = self._cpos[b] = 0
+            self._cachekey[b] = None
+            ctx = getattr(task, "ctx", None)
+            if ctx is not None and ctx.size:
+                ctx = np.asarray(ctx, np.int32).ravel()
+                L = len(ctx)
+                self._ctx[b] = ctx
+                self._ctxlen[b] = L
+                can_cache = (self.prefix_cache is not None
+                             and hasattr(self.predictor, "restore_slot"))
+                if can_cache and getattr(task, "cacheable", False):
+                    matched, snap = self.prefix_cache.lookup(ctx)
+                    if matched:
+                        # resume from the stored post-prefill state: the
+                        # snapshot's cache consumed [BOS, ctx[:matched-1]]
+                        # and ctx[matched-1] is the next decode input
+                        restores.append((b, snap))
+                        self._cpos[b] = matched
+                        self._prev[b] = ctx[matched - 1]
+                    if matched < L:
+                        self._cachekey[b] = ctx
             if task.kind == COMPRESS:
                 self._tok_buf[b, :] = 0
                 self._tok_buf[b, :task.valid] = task.tokens
@@ -296,6 +359,12 @@ class SlotScheduler:
                     "slot refill needs a per-lane cache reset (see "
                     "serve/engine.ModelPredictor) — or use the grouped "
                     "decoder")
+        if self._state is not None:
+            for b, snap in restores:    # after reset: restore overwrites
+                lane = np.zeros(self.B, bool)
+                lane[b] = True
+                self._state = self.predictor.restore_slot(self._state, snap,
+                                                          lane)
         self._used |= mask
 
     # --------------------------------------------------------------- step
@@ -315,8 +384,10 @@ class SlotScheduler:
             logits, self._state = self.predictor.decode_step(self._state,
                                                              self._prev)
             logits = np.asarray(logits)
-            dm = m & self._is_dec
-            cm = m & ~self._is_dec
+            pm = m & (self._cpos < self._ctxlen)     # prefilling context
+            am = m & ~pm                             # coding this step
+            dm = am & self._is_dec
+            cm = am & ~self._is_dec
             tq = self._t % self.C
             truth = self._tok_buf[self._lanes, tq]
             if self.topk:
@@ -366,14 +437,33 @@ class SlotScheduler:
                 if cm.any():
                     self._enc.put_symbols(truth.astype(np.int64), cdfs,
                                           self.precision, cm)
-            # write decoded tokens; advance every active lane
+            # write decoded tokens; advance every coding lane. Prefill
+            # lanes feed their next context token instead — their logits
+            # this step are discarded (context conditioning only).
             nxt = np.where(dm, syms, truth).astype(np.int32)
+            for b in np.nonzero(pm)[0]:
+                nxt[b] = self._ctx[b][self._cpos[b]]
             self._tok_buf[dm, self._t[dm]] = nxt[dm]
             self._prev = np.where(m, nxt, self._prev).astype(np.int32)
-            self._t[m] += 1
+            self._t[am] += 1
+            self._cpos[pm] += 1
             self._c_steps.inc()
             self._c_lanes.inc(self.B)
-            self._c_tokens.inc(int(m.sum()))
+            self._c_tokens.inc(int(am.sum()))
+            if pm.any():
+                self._c_prefill.inc(int(pm.sum()))
+                for b in np.nonzero(pm & (self._cpos >=
+                                          self._ctxlen))[0]:
+                    # prefix fully consumed this step: the lane's cache now
+                    # equals begin_decode(prefix=ctx) — snapshot it at the
+                    # boundary so later jobs skip this prefill entirely
+                    key = self._cachekey[int(b)]
+                    if key is not None and self.prefix_cache is not None \
+                            and hasattr(self.predictor, "snapshot_slot"):
+                        self.prefix_cache.insert(
+                            key, self.predictor.snapshot_slot(self._state,
+                                                              int(b)))
+                    self._cachekey[int(b)] = None
             for b in np.nonzero(m & (self._t >= self._valid))[0]:
                 self._finish_slot(int(b))
         if tel and self.log_every \
@@ -396,6 +486,12 @@ class SlotScheduler:
                     coded = self._enc.slot_cost_bits(b)
                 result = self._enc.flush_slot(b)
                 nbytes = len(result)
+                if task.fallback is not None and self.router is not None \
+                        and getattr(task, "llm_bits_est", -1.0) >= 0:
+                    # probe-vs-realized calibration for the adaptive skip
+                    # margin — before the flip overwrites the LLM length
+                    self.router.observe(task.llm_bits_est, 8.0 * nbytes,
+                                        len(task.fallback))
                 if task.fallback is not None:
                     # routed chunk: the probe kept the LLM path, but the
                     # realized fallback stream still wins if smaller —
@@ -428,11 +524,15 @@ class SlotScheduler:
                              + int(self._nesc[b]) * self._esc_bits)
             diag = None
             if tel:
+                ctx_name = ""
+                rk, rp = getattr(task, "recipe", (0, 0))
+                if rk and not codec:    # flipped chunks are context-free
+                    ctx_name = f"carry({rp})" if rk == 1 else f"shared[{rp}]"
                 diag = ChunkDiagnostics(
                     chunk_index=task.chunk_index, n_tokens=task.valid,
                     stream_bytes=nbytes, coded_bits=float(coded),
                     n_escapes=int(self._nesc[b]),
-                    codec=codec or "rans")
+                    codec=codec or "rans", context=ctx_name)
                 self._h_bpt.observe(diag.bits_per_token)
             task.complete(result, diag, codec=codec)
         except Exception as e:
@@ -444,6 +544,9 @@ class SlotScheduler:
         self._tasks[b] = None
         self._active[b] = False
         self._is_dec[b] = False
+        self._ctx[b] = None
+        self._ctxlen[b] = self._cpos[b] = 0
+        self._cachekey[b] = None
         self._c_chunks.inc()
 
     def run(self) -> SchedulerStats:

@@ -40,7 +40,21 @@ class ChunkTask:
     best-fallback stream in ``fallback``: the scheduler compares it
     against the slot encoder's flushed bytes at completion and keeps the
     smaller — the chunk still took a model slot (the probe kept it), but
-    the container never pays more than the fallback would."""
+    the container never pays more than the fallback would.
+
+    Context (v6, DESIGN.md §12): ``ctx`` is the chunk's declared context
+    prefix — the scheduler prefills it through the slot's lane before any
+    token is coded, and ``recipe`` is the (kind, param) pair the v6
+    container records so a decoder can rematerialize the same context.
+    ``cacheable`` marks ``ctx`` as a shared prefix worth storing in the
+    service's radix prefix cache (carry windows are chunk-unique — caching
+    them would only churn the LRU). ``ctx_budget`` is the job-wide
+    decode-length budget (the v6 footer's ``ctx_budget``): cache length
+    is coding geometry, so every chunk of a job — context-free ones
+    included — must run the model program at chunk_size + ctx_budget
+    positions, and the scheduler refuses to mix geometries mid-flight.
+    ``llm_bits_est`` is the router probe's estimate, fed back to
+    ``CodecRouter.observe`` at completion."""
     job: "Job"
     chunk_index: int
     kind: str
@@ -49,6 +63,11 @@ class ChunkTask:
     stream: Optional[bytes] = None
     fallback: Optional[bytes] = None
     fallback_codec: str = ""
+    ctx: Optional[np.ndarray] = None
+    recipe: tuple = (0, 0)
+    cacheable: bool = False
+    ctx_budget: int = 0
+    llm_bits_est: float = -1.0
 
     def complete(self, result,
                  diag: Optional[obs.ChunkDiagnostics] = None,

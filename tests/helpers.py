@@ -64,6 +64,16 @@ class GoldenPredictor:
     def rollback(self, snapshots, accepted):
         return snapshots
 
+    # prefix-cache hooks (v6): state is None, so a per-lane snapshot is
+    # trivially empty and restore is the identity — which lets scheduler
+    # tests exercise the radix-cache bookkeeping (hits, skipped prefill
+    # steps) without a jitted model
+    def snapshot_slot(self, state, lane):
+        return ("golden-snap",)
+
+    def restore_slot(self, state, snapshot, mask):
+        return state
+
 
 def golden_tokens(n=45, seed=1234, vocab=63):
     """The fixed token stream the golden containers were built from.

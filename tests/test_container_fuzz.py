@@ -24,7 +24,15 @@ mixed-codec container for ISSUE 8):
 * v5 semantic validation holds even when an attacker *recomputes* the
   checksums after tampering: unknown/mismatched codec tags and
   structurally broken fallback streams raise ContainerError, never a
-  silent wrong decode.
+  silent wrong decode;
+* a carried **v6** container (ISSUE 9) detects every single-bit flip and
+  every truncation — the footer hash additionally covers the per-chunk
+  recipe fields and the shared-prefix dictionary section;
+* v6 recipe/dictionary validation also holds behind recomputed
+  checksums: unknown recipe kinds, carry-on-chunk-0, zero carry
+  windows, out-of-range shared-prefix indices, recipes on
+  fallback-coded chunks, out-of-vocab dictionary tokens, and stray or
+  short dictionary bytes all raise ContainerError.
 """
 import pathlib
 import struct
@@ -37,7 +45,9 @@ from repro.core import (ContainerError, LLMCompressor, RouterConfig,
                         read_header, read_index)
 from repro.core.checksum import xxh64
 from repro.core.compressor import (MAGIC, _V3_HEADER, _V4_TRAILER, _V5_ENTRY,
-                                   _V5_ENTRY_SIZE, _V5_END_MAGIC, CODEC_RANS)
+                                   _V5_ENTRY_SIZE, _V5_END_MAGIC, _V6_ENTRY,
+                                   _V6_ENTRY_SIZE, _V6_END_MAGIC, CODEC_RANS,
+                                   RECIPE_CARRY, RECIPE_NONE)
 
 GOLDEN = pathlib.Path(__file__).parent / "golden"
 
@@ -328,3 +338,212 @@ def test_v5_range_decode_detects_fallback_corruption(v5_case):
     lo = 0 if fb else 1
     assert np.array_equal(comp.decompress_range(bytes(bad), lo, lo + 1),
                           comp.decompress_range(blob, lo, lo + 1))
+
+
+# --------------------------------------------- v6 carried-context containers
+@pytest.fixture(scope="module")
+def v6_case():
+    """A routed v6 container that exercises every recipe kind at once:
+    shared-prefix heads, carry chunks, and fallback chunks whose recipes
+    were zeroed by the router — plus a real dictionary section in the
+    footer. The fuzz below must cover the new recipe bytes and the
+    dictionary span."""
+    comp = _comp(topk=8, container_version=6, route="auto",
+                 router=RouterConfig(fallbacks=("raw", "lzma")),
+                 context_window=6, context_stripes=2,
+                 shared_prefix=golden_self_tokens(10, seed=9))
+    toks = np.concatenate([golden_self_tokens(32, seed=3),
+                           golden_tokens(32, seed=4),
+                           golden_self_tokens(16, seed=5),
+                           golden_tokens(21, seed=6)])
+    blob, _ = comp.compress(toks)
+    info = read_index(blob)
+    tags = {e.codec_name for e in info.entries}
+    kinds = {e.recipe_kind for e in info.entries}
+    assert "rans" in tags and tags != {"rans"}
+    assert RECIPE_CARRY in kinds and RECIPE_NONE in kinds
+    assert len(info.shared_prefixes) == 1
+    return comp, toks, blob
+
+
+def test_every_v6_truncation_raises_container_error(v6_case):
+    comp, _, blob = v6_case
+    for cut in range(len(blob)):
+        with pytest.raises(ContainerError):
+            comp.decompress(blob[:cut])
+
+
+def test_v6_detects_every_single_bit_flip(v6_case):
+    """Exhaustive: flip each bit of the carried container; decompress
+    must raise ContainerError every time. The recipe bytes and the
+    shared-prefix dictionary live inside the footer-hash span, streams
+    keep their per-chunk xxh64 — no new byte escapes coverage."""
+    comp, _, blob = v6_case
+    for i in range(len(blob)):
+        for bit in range(8):
+            bad = bytearray(blob)
+            bad[i] ^= 1 << bit
+            with pytest.raises(ContainerError):
+                comp.decompress(bytes(bad))
+
+
+def _v6_tamper(blob, chunk=None, tag=None, kind=None, param=None,
+               stream=None, dict_blob=None, ctx_budget=None):
+    """Rewrite a chunk's codec tag / recipe fields / stream bytes, the
+    shared-prefix dictionary section, and/or the recorded context budget
+    of a v6 container, RECOMPUTING every checksum, so only the semantic
+    validation stands between the tamper and a silent wrong decode."""
+    assert blob[-4:] == _V6_END_MAGIC
+    info = read_header(blob)
+    n, footer_len = struct.unpack("<II", blob[-12:-4])
+    footer_start = len(blob) - _V4_TRAILER - footer_len
+    entries_end = footer_start + n * _V6_ENTRY_SIZE
+    dict_len = footer_len - (n * _V6_ENTRY_SIZE + 16)
+    d = blob[entries_end:entries_end + dict_len] \
+        if dict_blob is None else dict_blob
+    eb = blob[entries_end + dict_len:entries_end + dict_len + 4]
+    cb = blob[entries_end + dict_len + 4:entries_end + dict_len + 8] \
+        if ctx_budget is None else struct.pack("<I", ctx_budget)
+    entries = [list(struct.unpack_from(_V6_ENTRY, blob,
+                                       footer_start + i * _V6_ENTRY_SIZE))
+               for i in range(n)]
+    body = bytearray(blob[:footer_start])
+    if chunk is not None:
+        if stream is not None:
+            off, ln = entries[chunk][0], entries[chunk][1]
+            assert len(stream) == ln
+            body[off:off + ln] = stream
+            entries[chunk][6] = xxh64(bytes(stream))
+        if tag is not None:
+            entries[chunk][3] = tag
+        if kind is not None:
+            entries[chunk][4] = kind
+        if param is not None:
+            entries[chunk][5] = param
+    ents = b"".join(struct.pack(_V6_ENTRY, *e) for e in entries)
+    tail = ents + d + eb + cb   # u32 encode_batch + u32 ctx_budget
+    return (bytes(body) + tail
+            + struct.pack("<Q", xxh64(blob[:info.header_size] + tail))
+            + struct.pack("<II", n, len(tail) + 8) + _V6_END_MAGIC)
+
+
+def test_v6_recipe_validation_behind_checksums(v6_case):
+    """Checksum-fixing tampers of the recipe fields still fail loudly:
+    every format law from DESIGN.md §12 is enforced by read_index, not
+    an artifact of hash coverage."""
+    comp, _, blob = v6_case
+    info = read_index(blob)
+    assert _v6_tamper(blob) == blob     # untampered rewrite is bit-exact
+    with pytest.raises(ContainerError, match="unknown recipe kind"):
+        comp.decompress(_v6_tamper(blob, 0, kind=3))
+    with pytest.raises(ContainerError, match="chunk 0 cannot carry"):
+        comp.decompress(_v6_tamper(blob, 0, kind=1, param=4))
+    carry = next(i for i, e in enumerate(info.entries)
+                 if e.recipe_kind == RECIPE_CARRY)
+    with pytest.raises(ContainerError, match="window 0"):
+        comp.decompress(_v6_tamper(blob, carry, param=0))
+    with pytest.raises(ContainerError, match="dictionary has 1"):
+        comp.decompress(_v6_tamper(blob, carry, kind=2, param=7))
+    fb = next(i for i, e in enumerate(info.entries) if not e.is_llm)
+    fb_kind, fb_param = (1, 4) if fb else (2, 0)
+    with pytest.raises(ContainerError, match="context-free"):
+        comp.decompress(_v6_tamper(blob, fb, kind=fb_kind, param=fb_param))
+
+
+def test_v6_ctx_budget_validation_behind_checksums(v6_case):
+    """The recorded context budget is coding geometry (DESIGN.md §12):
+    a checksum-fixing tamper that shrinks it below a chunk's materialized
+    context, or inflates it past the prefix-length ceiling, raises at
+    index time — a wrong budget could never have been the encoder's
+    decode-program length."""
+    comp, _, blob = v6_case
+    recorded = read_index(blob).ctx_budget
+    assert recorded > 0          # the fixture carries context by design
+    # a too-small budget violates the floor law for some carried chunk
+    with pytest.raises(ContainerError, match="materializes"):
+        comp.decompress(_v6_tamper(blob, ctx_budget=0))
+    # above the u16 prefix-length ceiling: structurally impossible
+    with pytest.raises(ContainerError, match="exceeds"):
+        comp.decompress(_v6_tamper(blob, ctx_budget=1 << 16))
+    # a LARGER-than-needed budget passes the index laws (routing may
+    # erase recipes after the budget is fixed, so over-provisioning is
+    # legal wire-wise). On a real model it changes the decode program —
+    # the per-chunk checksums catch that; the golden predictor is
+    # geometry-free, so here the archive still round-trips.
+    bigger = _v6_tamper(blob, ctx_budget=recorded + 4)
+    assert read_index(bigger).ctx_budget == recorded + 4
+    comp.decompress(bigger)
+
+
+def test_v6_dictionary_validation_behind_checksums(v6_case):
+    """Same idea for the shared-prefix dictionary section: a structurally
+    broken or out-of-vocab dictionary raises even with all checksums
+    recomputed over the tampered bytes."""
+    comp, _, blob = v6_case
+    vocab = read_header(blob).vocab
+    # token id outside the vocab
+    bad_tok = (struct.pack("<H", 1) + struct.pack("<B", 1) + b"p"
+               + struct.pack("<H", 1) + struct.pack("<I", vocab))
+    with pytest.raises(ContainerError, match="vocab"):
+        comp.decompress(_v6_tamper(blob, dict_blob=bad_tok))
+    # stray bytes after the last prefix (hash-covered span ≠ padding)
+    good = _v6_tamper(blob)
+    n, footer_len = struct.unpack("<II", good[-12:-4])
+    footer_start = len(good) - _V4_TRAILER - footer_len
+    entries_end = footer_start + n * _V6_ENTRY_SIZE
+    dict_len = footer_len - (n * _V6_ENTRY_SIZE + 16)
+    d = good[entries_end:entries_end + dict_len]
+    with pytest.raises(ContainerError, match="stray bytes"):
+        comp.decompress(_v6_tamper(blob, dict_blob=d + b"\x00"))
+    # an empty prefix (token count 0)
+    empty = (struct.pack("<H", 1) + struct.pack("<B", 1) + b"p"
+             + struct.pack("<H", 0))
+    with pytest.raises(ContainerError, match="empty"):
+        comp.decompress(_v6_tamper(blob, dict_blob=empty))
+    # a token count that runs past the section
+    short = (struct.pack("<H", 1) + struct.pack("<B", 1) + b"p"
+             + struct.pack("<H", 9) + struct.pack("<I", 1))
+    with pytest.raises(ContainerError, match="ends early"):
+        comp.decompress(_v6_tamper(blob, dict_blob=short))
+    # dropping the dictionary while shared recipes still reference it
+    with pytest.raises(ContainerError, match="dictionary has 0"):
+        comp.decompress(_v6_tamper(blob, dict_blob=struct.pack("<H", 0)))
+
+
+def test_v6_range_decode_matches_full_decode(v6_case):
+    """Random access over a carried archive: every interval equals the
+    matching slice of a full decode. Carried chunks are reconstructed by
+    decoding their chain from its head — invisible to the caller."""
+    comp, toks, blob = v6_case
+    full = comp.decompress(blob)
+    assert np.array_equal(full, toks)
+    info = read_index(blob)
+    C = info.chunk_size
+    for lo in range(info.n_chunks):
+        for hi in range(lo + 1, info.n_chunks + 1):
+            part = comp.decompress_range(blob, lo, hi)
+            assert np.array_equal(part,
+                                  full[lo * C:min(hi * C, toks.size)]), \
+                (lo, hi)
+
+
+def test_v6_range_decode_detects_upstream_corruption(v6_case):
+    """A carried chunk's range decode must fail loudly when its chain
+    HEAD is corrupt (the context it needs cannot be reconstructed), while
+    chunks in other chains stay independently readable."""
+    comp, _, blob = v6_case
+    info = read_index(blob)
+    carry = next(i for i, e in enumerate(info.entries)
+                 if e.recipe_kind == RECIPE_CARRY)
+    head = max(i for i in range(carry + 1)
+               if info.entries[i].recipe_kind != RECIPE_CARRY)
+    assert head < carry
+    bad = bytearray(blob)
+    bad[info.entries[head].offset] ^= 0x01
+    with pytest.raises(ContainerError, match=f"chunk {head}"):
+        comp.decompress_range(bytes(bad), carry, carry + 1)
+    # a chunk that heads a DIFFERENT chain never reads the damaged bytes
+    other = next(i for i, e in enumerate(info.entries)
+                 if e.recipe_kind != RECIPE_CARRY and i != head)
+    assert np.array_equal(comp.decompress_range(bytes(bad), other, other + 1),
+                          comp.decompress_range(blob, other, other + 1))

@@ -1,0 +1,486 @@
+"""Carried-context ratio engine (ISSUE 9 / DESIGN.md §12).
+
+The load-bearing claims under test:
+
+* **recipe plans** split chunks into striped carry chains whose heads
+  start fresh (or from the shared prefix), and the encode-side context
+  materialization clamps carry windows to what the predecessor really
+  held — the same helper the service uses, so encode can't drift from
+  the format;
+* carried and shared-prefix containers round-trip **bit-exactly** at
+  ANY decode slot count and through ``decompress_range`` over every
+  chunk interval — a recipe never makes a chunk depend on state the
+  ranged decoder can't reconstruct;
+* all-fallback v5/v6 archives decompress and range-decode fully
+  **model-free**: no predictor method is called, no prefix-cache entry
+  is touched (the regression fixed in this PR);
+* the **radix prefix cache** returns the deepest stored ancestor,
+  splits edges on divergence, evicts LRU by stored-token budget, and
+  counts hits/misses/evictions/tokens-reused;
+* engine-level **prefill-from-prefix** is bit-identical to feeding the
+  prefix through sequential ``decode_step`` calls, and a
+  snapshot/restore of a post-prefill lane reproduces the same decode
+  stream — the invariant that makes cache reuse lossless;
+* the scheduler skips prefill steps for cache hits on shared-prefix
+  jobs, and the archives it writes still round-trip bit-exactly.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from _hypo import given, settings, st
+from helpers import (GoldenPredictor, golden_self_tokens, golden_text_tokens,
+                     golden_tokens, tiny)
+from repro.core import (ContainerError, LLMCompressor, RECIPE_CARRY,
+                        RECIPE_NONE, RECIPE_SHARED, RouterConfig,
+                        assign_context_recipes, container_is_model_free,
+                        decompress_model_free, decompress_range_model_free,
+                        read_index, recipe_context)
+from repro.models import init_params
+from repro.serve.engine import ModelPredictor
+from repro.service import CompressionService, RadixPrefixCache
+
+VOCAB = 64
+
+
+def _comp(**kw):
+    base = dict(chunk_size=16, decode_batch=4, topk=8, codec="rans",
+                container_version=6)
+    base.update(kw)
+    return LLMCompressor(GoldenPredictor(), **base)
+
+
+def _model_pred():
+    cfg = tiny("dense", vocab_size=258)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return ModelPredictor(params, cfg, bos_id=257)
+
+
+# ------------------------------------------------------------ recipe plans
+def test_assign_context_recipes_plan():
+    assert assign_context_recipes(0) == []
+    assert assign_context_recipes(3) == [(RECIPE_NONE, 0)] * 3
+    assert assign_context_recipes(3, shared=True) == [(RECIPE_SHARED, 0)] * 3
+    # 5 chunks over 2 stripes: chain lengths 3 + 2, heads fresh
+    assert assign_context_recipes(5, context_window=8, stripes=2) == [
+        (RECIPE_NONE, 0), (RECIPE_CARRY, 8), (RECIPE_CARRY, 8),
+        (RECIPE_NONE, 0), (RECIPE_CARRY, 8)]
+    # shared heads chain into carries
+    assert assign_context_recipes(4, context_window=4, stripes=1,
+                                  shared=True) == [
+        (RECIPE_SHARED, 0)] + [(RECIPE_CARRY, 4)] * 3
+    # more stripes than chunks degrades to all-heads (no carry at all)
+    assert assign_context_recipes(2, context_window=4, stripes=8) == \
+        [(RECIPE_NONE, 0)] * 2
+
+
+def test_recipe_context_materialization():
+    chunks = np.arange(32, dtype=np.int32).reshape(2, 16)
+    valid = np.array([16, 10])
+    recipes = [(RECIPE_NONE, 0), (RECIPE_CARRY, 6)]
+    assert recipe_context(recipes, chunks, valid, 0, []).size == 0
+    np.testing.assert_array_equal(
+        recipe_context(recipes, chunks, valid, 1, []), np.arange(10, 16))
+    # a window wider than the predecessor clamps to its valid tokens
+    recipes[1] = (RECIPE_CARRY, 99)
+    np.testing.assert_array_equal(
+        recipe_context(recipes, chunks, valid, 1, []), np.arange(16))
+    sp = [("s", np.array([5, 6], np.int32))]
+    np.testing.assert_array_equal(
+        recipe_context([(RECIPE_SHARED, 0)], chunks, valid, 0, sp), [5, 6])
+
+
+def test_context_config_validation():
+    with pytest.raises(ValueError, match="v6"):
+        _comp(container_version=5, context_window=4)
+    with pytest.raises(ValueError, match="outside"):
+        _comp(context_window=-1)
+    with pytest.raises(ValueError, match="vocab"):
+        _comp(shared_prefix=np.array([999]))
+    with pytest.raises(ValueError, match="tokens"):
+        _comp(shared_prefix=np.zeros(0, np.int64))
+
+
+# ----------------------------------------------------- carried round-trips
+@settings(max_examples=12, deadline=None)
+@given(st.integers(17, 90), st.integers(1, 12), st.integers(1, 4),
+       st.integers(0, 2 ** 20))
+def test_carried_roundtrip_bit_exact_across_slot_counts(n, W, S, seed):
+    """The property the format is built on: a carried archive decodes
+    bit-exactly regardless of the decoder's slot count (1, 3, 8 — none
+    equal to the encoder's), and every chunk interval range-decodes to
+    the matching slice. Carry chains are per-lane self-contained, so the
+    recorded recipes + lane count pin the token streams exactly."""
+    toks = golden_self_tokens(n, seed=seed)
+    blob, _ = _comp(context_window=W, context_stripes=S).compress(toks)
+    info = read_index(blob)
+    if info.n_chunks > S:
+        assert any(e.recipe_kind == RECIPE_CARRY for e in info.entries)
+    for B in (1, 3, 8):
+        assert np.array_equal(_comp(decode_batch=B).decompress(blob), toks)
+    dec = _comp(decode_batch=2)
+    full = dec.decompress(blob)
+    assert np.array_equal(full, toks)
+    C = info.chunk_size
+    for lo in range(info.n_chunks):
+        for hi in {lo + 1, info.n_chunks}:
+            part = dec.decompress_range(blob, lo, hi)
+            assert np.array_equal(part, full[lo * C:min(hi * C, n)]), \
+                (lo, hi)
+
+
+def test_shared_prefix_roundtrip_and_index():
+    sp = golden_self_tokens(24, seed=5)
+    toks = golden_self_tokens(70, seed=6)
+    comp = _comp(shared_prefix=sp, shared_prefix_name="sys")
+    blob, _ = comp.compress(toks)
+    info = read_index(blob)
+    assert [n for n, _ in info.shared_prefixes] == ["sys"]
+    np.testing.assert_array_equal(info.shared_prefixes[0][1], sp)
+    assert all(e.recipe_kind == RECIPE_SHARED for e in info.entries)
+    assert np.array_equal(_comp().decompress(blob), toks)
+    # a single-chunk range decode needs only the dictionary
+    assert np.array_equal(_comp().decompress_range(blob, 1, 2), toks[16:32])
+
+
+def test_shared_prefix_plus_carry_roundtrip():
+    """Both recipe kinds in one archive: shared heads, carry bodies."""
+    sp = golden_self_tokens(12, seed=7)
+    toks = golden_self_tokens(100, seed=8)
+    comp = _comp(shared_prefix=sp, context_window=10, context_stripes=2)
+    blob, _ = comp.compress(toks)
+    kinds = {e.recipe_kind for e in read_index(blob).entries}
+    assert kinds == {RECIPE_SHARED, RECIPE_CARRY}
+    assert np.array_equal(_comp(decode_batch=3).decompress(blob), toks)
+
+
+# ------------------------------------------------------ model-free decode
+class _NoModel(GoldenPredictor):
+    """Explodes on every model entry point — proves a decode path never
+    touched the model."""
+
+    def score_chunks(self, *a, **k):
+        raise AssertionError("model touched: score_chunks")
+
+    def begin_decode(self, *a, **k):
+        raise AssertionError("model touched: begin_decode")
+
+    def decode_step(self, *a, **k):
+        raise AssertionError("model touched: decode_step")
+
+    def snapshot_slot(self, *a, **k):
+        raise AssertionError("model touched: snapshot_slot")
+
+
+@pytest.mark.parametrize("version", [5, 6])
+def test_all_fallback_archive_decodes_model_free(version):
+    """Regression (ISSUE 9 bugfix): an archive whose every chunk is
+    fallback-coded decodes and range-decodes with no model at all —
+    the module-level helpers need no predictor, and a compressor whose
+    predictor explodes on any model call still decodes it."""
+    toks = golden_text_tokens()
+    kw = dict(route="lzma", chunk_size=64, container_version=version)
+    if version == 6:
+        kw.update(context_window=8, context_stripes=2)
+    blob, _ = _comp(**kw).compress(toks)
+    info = read_index(blob)
+    assert container_is_model_free(info)
+    # forced-fallback chunks are context-free by format law, even though
+    # the encoder was configured with a carried-context plan
+    assert all(e.recipe_kind == RECIPE_NONE for e in info.entries)
+    assert np.array_equal(decompress_model_free(blob), toks)
+    assert np.array_equal(decompress_range_model_free(blob, 1, 3),
+                          toks[64:192])
+    dead = LLMCompressor(_NoModel(), chunk_size=64, decode_batch=4, topk=8)
+    assert np.array_equal(dead.decompress(blob), toks)
+    assert np.array_equal(dead.decompress_range(blob, 0, 2), toks[:128])
+
+
+def test_service_decodes_all_fallback_without_model_or_cache():
+    """The service path of the same regression: submit_decompress on an
+    all-fallback archive resolves without a model step, a prefill, or a
+    prefix-cache touch."""
+    toks = golden_text_tokens()
+    blob, _ = _comp(route="lzma", chunk_size=64, container_version=6,
+                    context_window=8).compress(toks)
+    svc = CompressionService(_NoModel(), slots=4, chunk_size=64, topk=8)
+    got = svc.submit_decompress(blob).result()
+    assert np.array_equal(got, toks)
+    snap = svc.snapshot()["prefix_cache"]
+    assert snap["hits"] == 0 and snap["misses"] == 0
+    assert svc.stats.model_steps == 0 and svc.stats.prefill_steps == 0
+
+
+def test_model_free_helpers_reject_llm_chunks():
+    toks = golden_self_tokens(40, seed=3)
+    blob, _ = _comp().compress(toks)
+    assert not container_is_model_free(read_index(blob))
+    with pytest.raises(ContainerError, match="model"):
+        decompress_model_free(blob)
+
+
+# ------------------------------------------------------- radix prefix cache
+def test_radix_cache_lookup_insert_split():
+    c = RadixPrefixCache(capacity_tokens=1000)
+    a = np.arange(10, dtype=np.int32)
+    c.insert(a, "A")
+    assert len(c) == 1 and c.size_tokens == 10
+    # exact hit, and a query that EXTENDS the stored prefix still hits it
+    assert c.lookup(a) == (10, "A")
+    assert c.lookup(np.concatenate([a, [99]])) == (10, "A")
+    # a strict prefix of the stored key has no stored ancestor
+    assert c.lookup(a[:5]) == (0, None)
+    # diverging insert splits the edge; both keys stay retrievable
+    b = np.concatenate([a[:5], [50, 51]]).astype(np.int32)
+    c.insert(b, "B")
+    assert c.lookup(a) == (10, "A")
+    assert c.lookup(b) == (7, "B")
+    # the split midpoint is a skeleton node, not a stored value
+    assert c.lookup(a[:5]) == (0, None)
+    # deepest stored ancestor wins when several lie on the path
+    c.insert(a[:5], "MID")
+    assert c.lookup(a) == (10, "A")
+    assert c.lookup(np.concatenate([a[:5], [77]])) == (5, "MID")
+    assert len(c) == 3 and c.size_tokens == 22
+
+
+def test_radix_cache_lru_eviction_and_counters():
+    c = RadixPrefixCache(capacity_tokens=25)
+    a = np.arange(0, 10, dtype=np.int32)
+    b = np.arange(20, 30, dtype=np.int32)
+    c.insert(a, "A")
+    c.insert(b, "B")
+    assert c.lookup(a) == (10, "A")      # touch A: B becomes LRU
+    d = np.arange(40, 50, dtype=np.int32)
+    c.insert(d, "D")                     # 30 tokens > 25: evict B
+    assert c.lookup(b) == (0, None)
+    assert c.lookup(a) == (10, "A") and c.lookup(d) == (10, "D")
+    assert c.size_tokens == 20
+    assert c._c_evict.value == 1
+    assert c._c_hits.value == 3 and c._c_misses.value == 1
+    c.clear()
+    assert len(c) == 0 and c.size_tokens == 0
+    assert c.lookup(a) == (0, None)
+    # an entry larger than the whole budget is still stored (capacity
+    # bounds the steady state, never rejects the working set's newest)
+    c.insert(np.arange(100, dtype=np.int32), "BIG")
+    assert c.lookup(np.arange(100, dtype=np.int32))[0] == 100
+
+
+def test_radix_cache_validates():
+    with pytest.raises(ValueError, match="positive"):
+        RadixPrefixCache(capacity_tokens=0)
+    c = RadixPrefixCache()
+    with pytest.raises(ValueError, match="empty"):
+        c.insert(np.zeros(0, np.int32), "X")
+
+
+# ------------------------------------------- engine prefill-from-prefix
+def test_prefill_matches_sequential_decode_bit_exact():
+    """begin_decode(prefix=...) must leave the KV cache in EXACTLY the
+    state sequential decode_step calls produce — same jitted program,
+    same reduction order — so carried encode and decode see identical
+    distributions. Checked on logits, not argmax: bit-equality is the
+    coder's actual requirement."""
+    pred = _model_pred()
+    pred.set_decode_len(48)
+    prefix = np.array([[3, 1, 4, 1, 5, 9, 2, 6],
+                       [2, 7, 1, 8, 2, 8, 1, 8]], np.int32)
+    cont = np.array([[5, 3, 5], [9, 7, 9]], np.int32)
+    # reference: feed [BOS, prefix] one token at a time
+    state = pred.begin_decode(2)
+    prev = np.full(2, pred.bos_id, np.int32)
+    for t in range(prefix.shape[1]):
+        _, state = pred.decode_step(state, prev)
+        prev = prefix[:, t]
+    ref = []
+    for t in range(cont.shape[1]):
+        logits, state = pred.decode_step(state, prev)
+        ref.append(np.asarray(logits))
+        prev = cont[:, t]
+    # prefilled: the cache consumed [BOS, prefix[:-1]]; prefix[-1] is
+    # the first decode input (the convention score/encode rely on)
+    state2 = pred.begin_decode(2, prefix=prefix)
+    prev2 = prefix[:, -1]
+    for t in range(cont.shape[1]):
+        logits2, state2 = pred.decode_step(state2, prev2)
+        assert np.array_equal(np.asarray(logits2), ref[t]), t
+        prev2 = cont[:, t]
+    # 1-D prefix broadcasts across lanes
+    state3 = pred.begin_decode(2, prefix=prefix[0])
+    logits3, _ = pred.decode_step(state3, np.repeat(prefix[0, -1], 2))
+    assert np.array_equal(np.asarray(logits3)[0], np.asarray(logits3)[1])
+
+
+def test_snapshot_restore_slot_bit_exact():
+    """A lane snapshot taken after prefill, restored into a DIFFERENT
+    decode state, continues with bit-identical logits — the property the
+    radix cache's reuse depends on."""
+    pred = _model_pred()
+    pred.set_decode_len(32)
+    prefix = np.array([7, 3, 7, 3, 7, 1], np.int32)
+    sA = pred.begin_decode(2, prefix=prefix)
+    snap = pred.snapshot_slot(sA, 1)
+    ref, _ = pred.decode_step(sA, np.repeat(prefix[-1], 2))
+    # fresh state, garbage in every lane, then restore into lane 0 only
+    sB = pred.begin_decode(2)
+    for tok in (9, 4, 4):
+        _, sB = pred.decode_step(sB, np.repeat(tok, 2))
+    sB = pred.reset_slots(sB, np.array([True, True]))
+    sB = pred.restore_slot(sB, snap, np.array([True, False]))
+    got, _ = pred.decode_step(sB, np.repeat(prefix[-1], 2))
+    assert np.array_equal(np.asarray(got)[0], np.asarray(ref)[1])
+
+
+def test_model_carried_roundtrip():
+    """End-to-end on a real jitted model: carried + shared context
+    round-trips bit-exactly, including through decompress_range."""
+    pred = _model_pred()
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, 200, 70).astype(np.int32)
+    comp = LLMCompressor(pred, chunk_size=16, decode_batch=4, topk=12,
+                         container_version=6, context_window=8,
+                         context_stripes=2,
+                         shared_prefix=np.arange(10, dtype=np.int32))
+    blob, _ = comp.compress(toks)
+    info = read_index(blob)
+    assert {e.recipe_kind for e in info.entries} == \
+        {RECIPE_SHARED, RECIPE_CARRY}
+    dec = LLMCompressor(_model_pred(), chunk_size=16, decode_batch=3,
+                        topk=12)
+    assert np.array_equal(dec.decompress(blob), toks)
+    assert np.array_equal(dec.decompress_range(blob, 2, 4), toks[32:64])
+
+
+# ------------------------------------------------- service + prefix cache
+def test_service_shared_prefix_jobs_hit_cache_and_roundtrip():
+    """Shared-prefix jobs through the scheduler: later slots restore the
+    cached post-prefill snapshot instead of re-running prefill (hits > 0,
+    prefill steps strictly below the cache-off run), and every archive
+    still round-trips bit-exactly."""
+    sp = golden_self_tokens(20, seed=41)
+    jobs = [golden_self_tokens(48, seed=50 + i) for i in range(4)]
+
+    def run(cache_on):
+        svc = CompressionService(GoldenPredictor(), slots=4, chunk_size=16,
+                                 topk=8)
+        if not cache_on:
+            svc.scheduler.prefix_cache = None
+        handles = [svc.submit_compress(t, shared_prefix=sp) for t in jobs]
+        blobs = [h.result()[0] for h in handles]
+        return svc, blobs
+
+    svc_on, blobs_on = run(True)
+    svc_off, blobs_off = run(False)
+    assert blobs_on == blobs_off        # the cache changes compute only
+    for blob, toks in zip(blobs_on, jobs):
+        info = read_index(blob)
+        assert all(e.recipe_kind == RECIPE_SHARED for e in info.entries)
+        assert np.array_equal(_comp().decompress(blob), toks)
+    snap = svc_on.snapshot()["prefix_cache"]
+    assert snap["hits"] > 0 and snap["tokens_reused"] > 0
+    assert snap["entries"] >= 1
+    assert 0 < svc_on.stats.prefill_steps < svc_off.stats.prefill_steps
+    off = svc_off.snapshot()["prefix_cache"]
+    assert off["hits"] == 0 and off["misses"] == 0
+
+
+# ------------------------------------------------------------------ CLI
+def _cli_setup(tmp_path, monkeypatch, n=64):
+    import repro.cli as cli
+    pred = GoldenPredictor(vocab_size=258, seed=0)
+    monkeypatch.setattr(cli, "_predictor", lambda name: pred)
+    data = np.random.default_rng(19).integers(
+        0, 200, n, dtype=np.uint8).tobytes()
+    src = tmp_path / "data.bin"
+    src.write_bytes(data)
+    return cli, data, src
+
+
+def test_cli_context_window_writes_v6_and_info_prints_recipes(
+        tmp_path, monkeypatch, capsys):
+    """`llmc compress --context-window` produces a carried v6 archive;
+    `llmc info` prints the per-chunk recipe column, the context mix, and
+    the (empty) prefix dictionary."""
+    cli, data, src = _cli_setup(tmp_path, monkeypatch)
+    arc, out = tmp_path / "a.llmc", tmp_path / "out.bin"
+    # --slots bounds the stripe count: 2 stripes over 4 chunks makes
+    # genuine carry chains (at the 16-slot default every chunk would
+    # head its own one-chunk chain and no carry recipe would survive)
+    assert cli.main(["compress", str(src), str(arc), "--chunk", "16",
+                     "--topk", "8", "--context-window", "8",
+                     "--slots", "2"]) == 0
+    blob = arc.read_bytes()
+    assert blob[4] == 6 and blob[-4:] == b"LC6F"
+    assert any(e.recipe_kind == RECIPE_CARRY
+               for e in read_index(blob).entries)
+    assert cli.main(["info", str(arc)]) == 0
+    shown = capsys.readouterr().out
+    assert "context" in shown and "carry(8)" in shown
+    assert "contexts:" in shown
+    assert "shared prefixes: none" in shown
+    assert cli.main(["decompress", str(arc), str(out)]) == 0
+    assert out.read_bytes() == data
+
+
+def test_cli_shared_prefix_file_roundtrip_and_info(
+        tmp_path, monkeypatch, capsys):
+    cli, data, src = _cli_setup(tmp_path, monkeypatch)
+    pref = tmp_path / "sys.txt"
+    pref.write_bytes(b"system: compress nicely")
+    arc, out = tmp_path / "a.llmc", tmp_path / "out.bin"
+    assert cli.main(["compress", str(src), str(arc), "--chunk", "16",
+                     "--topk", "8", "--shared-prefix", str(pref)]) == 0
+    info = read_index(arc.read_bytes())
+    assert len(info.shared_prefixes) == 1
+    assert all(e.recipe_kind == RECIPE_SHARED for e in info.entries)
+    assert cli.main(["info", str(arc)]) == 0
+    shown = capsys.readouterr().out
+    assert "shared prefix [0]:" in shown and "23 tokens" in shown
+    assert cli.main(["decompress", str(arc), str(out)]) == 0
+    assert out.read_bytes() == data
+
+
+def test_cli_sidecar_records_chunk_context(tmp_path, monkeypatch, capsys):
+    """The JSON sidecar carries each chunk's recipe so offline analysis
+    can segment ratio by context kind."""
+    import json
+    cli, data, src = _cli_setup(tmp_path, monkeypatch)
+    arc = tmp_path / "a.llmc"
+    assert cli.main(["compress", str(src), str(arc), "--chunk", "16",
+                     "--topk", "8", "--context-window", "8",
+                     "--slots", "2", "--sidecar"]) == 0
+    side = tmp_path / "a.llmc.diag.json"
+    assert side.exists()
+    diag = json.loads(side.read_text())
+    ctxs = [c.get("context") for c in diag["chunks"]]
+    assert any(c == "carry(8)" for c in ctxs)
+
+
+def test_cli_context_flags_reject_non_service_paths(tmp_path, monkeypatch):
+    cli, data, src = _cli_setup(tmp_path, monkeypatch)
+    arc = tmp_path / "a.llmc"
+    with pytest.raises(SystemExit, match="context"):
+        cli.main(["compress", str(src), str(arc), "--v3",
+                  "--context-window", "4"])
+    pref = tmp_path / "p.bin"
+    pref.write_bytes(b"pp")
+    with pytest.raises(SystemExit, match="context"):
+        cli.main(["compress", str(src), str(arc), "--codec", "ac",
+                  "--shared-prefix", str(pref)])
+
+
+def test_service_carried_compress_matches_grouped_bytes():
+    """The scheduler's carried encode writes byte-identical containers
+    to the grouped compressor's for the same context plan — the service
+    reuses assign_context_recipes/recipe_context, so the two paths
+    cannot drift."""
+    toks = golden_self_tokens(90, seed=61)
+    svc = CompressionService(GoldenPredictor(), slots=4, chunk_size=16,
+                             topk=8)
+    blob_svc, _ = svc.submit_compress(toks, context_window=6).result()
+    ref = _comp(context_window=6, context_stripes=4)
+    blob_ref, _ = ref.compress(toks)
+    assert blob_svc == blob_ref
+    assert np.array_equal(_comp().decompress(blob_svc), toks)

@@ -23,6 +23,12 @@ matrix (version × codec × cdf-mode/route), produced by known-good code:
   chunk touches the model). The lzma cell is decode-only — its payload
   bytes depend on the liblzma build, so like v2 it guards decode, not
   re-encode.
+* ``v6_*.llmc`` — v5 plus a hash-covered per-chunk context recipe and a
+  shared-prefix dictionary section (DESIGN.md §12). Three regimes:
+  carried context (``v6_carry_topk``: striped carry chains), shared
+  prefix (``v6_shared_full``: every chunk conditioned on a dictionary
+  prefix), and routed+carried (``v6_mixed_raw``: fallback chunks get
+  their recipes zeroed by format law). Byte-stable like v3–v5.
 
 All goldens use the deterministic, model-free ``GoldenPredictor`` and
 fixed token streams (tests/helpers.py), so no model weights are
@@ -35,7 +41,7 @@ import numpy as np
 import pytest
 
 from helpers import (GoldenPredictor, golden_mixed_tokens,
-                     golden_text_tokens, golden_tokens)
+                     golden_self_tokens, golden_text_tokens, golden_tokens)
 from repro.core import LLMCompressor, RouterConfig, read_header
 
 GOLDEN = pathlib.Path(__file__).parent / "golden"
@@ -70,6 +76,20 @@ CASES = {
                                       container_version=5, route="lzma",
                                       chunk_size=64),
                               golden_text_tokens()),
+    "v6_carry_topk.llmc": (6, dict(topk=8, codec="rans",
+                                   container_version=6, context_window=8,
+                                   context_stripes=2),
+                           golden_self_tokens()),
+    "v6_shared_full.llmc": (6, dict(topk=0, codec="rans",
+                                    container_version=6,
+                                    shared_prefix=golden_self_tokens(
+                                        12, seed=9)),
+                            golden_self_tokens(37, seed=321)),
+    "v6_mixed_raw.llmc": (6, dict(topk=8, codec="rans",
+                                  container_version=6, route="auto",
+                                  router=RouterConfig(fallbacks=("raw",)),
+                                  context_window=8, context_stripes=1),
+                          golden_mixed_tokens()),
 }
 
 # Cells whose bytes must decode but are NOT re-encoded for identity:
@@ -135,7 +155,8 @@ def test_indexed_goldens_carry_verified_index(name):
     _, kw, toks = CASES[name]
     blob = (GOLDEN / name).read_bytes()
     info = read_index(blob)             # verifies footer checksum
-    assert blob[-4:] == (b"LC4F" if name.startswith("v4") else b"LC5F")
+    assert blob[-4:] == {"v4": b"LC4F", "v5": b"LC5F",
+                         "v6": b"LC6F"}[name[:2]]
     assert info.n_chunks == len(info.entries)
     assert sum(e.n_tokens for e in info.entries) == toks.size
     # the encoder's batch shape is part of the coding geometry on
@@ -146,14 +167,24 @@ def test_indexed_goldens_carry_verified_index(name):
     # when no chunk touched the model at all (forced-fallback cell). The
     # mixed golden pins 3: the probe skipped one random chunk, kept the
     # other (it flipped to raw only after the realized-size compare).
-    n_llm = sum(e.is_llm for e in info.entries)
-    assert min(4, n_llm) <= info.encode_batch <= min(4, info.n_chunks)
-    if name == "v5_mixed_raw.llmc":
-        assert info.encode_batch == 3
-    elif name == "v5_fallback_lzma.llmc":
-        assert info.encode_batch == 0
+    # Carried v6 containers batch one lane per carry CHAIN instead, so
+    # their lane count is min(stripes, n_chains): 2 for the striped
+    # carry cell, 3 chains (= chunks, all heads) for the shared cell,
+    # and 1 for the single-stripe mixed cell.
+    if name.startswith("v6"):
+        assert info.encode_batch == {"v6_carry_topk.llmc": 2,
+                                     "v6_shared_full.llmc": 3,
+                                     "v6_mixed_raw.llmc": 1}[name]
     else:
-        assert info.encode_batch == min(4, info.n_chunks)
+        assert info.ctx_budget == 0     # pre-v6 wire has no budget field
+        n_llm = sum(e.is_llm for e in info.entries)
+        assert min(4, n_llm) <= info.encode_batch <= min(4, info.n_chunks)
+        if name == "v5_mixed_raw.llmc":
+            assert info.encode_batch == 3
+        elif name == "v5_fallback_lzma.llmc":
+            assert info.encode_batch == 0
+        else:
+            assert info.encode_batch == min(4, info.n_chunks)
     if info.n_chunks:
         # random access: last chunk alone (works across mixed codecs)
         C = info.chunk_size
@@ -197,6 +228,59 @@ def test_v5_fallback_golden_never_touches_model():
     other = LLMCompressor(GoldenPredictor(seed=999), chunk_size=64,
                           decode_batch=4, topk=8)
     assert np.array_equal(other.decompress(blob), golden_text_tokens())
+
+
+def test_v6_golden_recipes_frozen():
+    """The v6 cells pin the recipe plan chunk by chunk, including the
+    two format laws that matter most: a routed-to-fallback chunk has its
+    recipe zeroed (mixed cell, chunks 1 and 3), and a carry may survive
+    across a fallback-coded *predecessor* (mixed cell, chunk 2 — its
+    context tokens come from decoded output, not from any codec)."""
+    from repro.core import read_index
+    # third element: the recorded decode-length budget (ctx_budget) —
+    # coding geometry, computed from the PRE-routing context plan, so
+    # the mixed cell records 8 even though routing later zeroed some
+    # carries (the model groups still encoded at chunk_size + 8)
+    expect = {
+        "v6_carry_topk.llmc": (["none", "carry(8)", "none"], 0, 8),
+        "v6_shared_full.llmc": (["shared[0]"] * 3, 1, 12),
+        "v6_mixed_raw.llmc": (["none", "none", "carry(8)", "none"], 0, 8),
+    }
+    for name, (recipes, n_prefixes, budget) in expect.items():
+        info = read_index((GOLDEN / name).read_bytes())
+        assert [e.recipe_name for e in info.entries] == recipes, name
+        assert len(info.shared_prefixes) == n_prefixes, name
+        assert info.ctx_budget == budget, name
+    info = read_index((GOLDEN / "v6_shared_full.llmc").read_bytes())
+    name, toks = info.shared_prefixes[0]
+    assert name == "shared" and np.array_equal(
+        toks, golden_self_tokens(12, seed=9))
+    # and the mixed cell's tag row matches the v5 mixed regime
+    info = read_index((GOLDEN / "v6_mixed_raw.llmc").read_bytes())
+    assert [e.codec_name for e in info.entries] == \
+        ["rans", "raw", "rans", "raw"]
+
+
+def test_v6_goldens_range_matches_full_decode():
+    """Every chunk interval of every v6 golden — carried, shared, and
+    routed — equals the matching slice of a full decode. This is the
+    format's core promise: a recipe never makes a chunk depend on
+    anything `decompress_range` can't reconstruct."""
+    from repro.core import read_index
+    for name in ("v6_carry_topk.llmc", "v6_shared_full.llmc",
+                 "v6_mixed_raw.llmc"):
+        _, kw, toks = CASES[name]
+        comp = _comp(kw)
+        blob = (GOLDEN / name).read_bytes()
+        full = comp.decompress(blob)
+        assert np.array_equal(full, toks)
+        info = read_index(blob)
+        C = info.chunk_size
+        for lo in range(info.n_chunks):
+            for hi in range(lo + 1, info.n_chunks + 1):
+                part = comp.decompress_range(blob, lo, hi)
+                assert np.array_equal(
+                    part, full[lo * C:min(hi * C, toks.size)]), (name, lo, hi)
 
 
 def test_v5_mixed_range_matches_full_decode():

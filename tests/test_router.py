@@ -214,6 +214,73 @@ def test_forced_route_validation():
         _comp(route="raw", container_version=3)
 
 
+# ------------------------------------------------------- adaptive margin
+def test_adaptive_margin_direction_and_clamps():
+    """The calibration loop moves the effective margin the right way:
+    estimates running HOT (realized > estimated — the probe flatters the
+    model on adversarial traffic) shrink the margin toward the floor so
+    such chunks skip sooner; estimates running COOL grow it toward the
+    ceiling so predictable chunks keep their slot. Both ends clamp, each
+    class calibrates independently, and fixed mode never moves."""
+    r = CodecRouter(RouterConfig(fallbacks=("raw",)))
+    for cls in ("predictable", "borderline", "adversarial"):
+        assert r.margin_for(cls) == pytest.approx(1.25)   # no history yet
+    # adversarial traffic (est 2.5x the fallback bits), realized 2x hot:
+    # margin 1.25/2.0 = 0.625 clamps UP to the 1.05 floor
+    r.observe(2000.0, 4000.0, 100)
+    assert r.margin_for("adversarial") == pytest.approx(1.05)
+    # predictable traffic (est 0.5x fallback), realized 2x cool:
+    # 1.25/0.5 = 2.5 clamps DOWN to the 2.0 ceiling
+    r.observe(400.0, 200.0, 100)
+    assert r.margin_for("predictable") == pytest.approx(2.0)
+    # the un-observed class is untouched — regimes never cross-talk
+    assert r.margin_for("borderline") == pytest.approx(1.25)
+    # the margin feeds the skip decision directionally: a borderline
+    # chunk (est 900 vs 800 fallback bits) is kept at the default margin
+    # (900 < 1.25*800); after its class runs 2x hot the floor margin
+    # skips it (900 > 1.05*800)
+    assert not r.skip_llm(900.0, b"\x00" * 100)
+    r.observe(900.0, 1800.0, 100)            # borderline class, 2x hot
+    assert r.margin_for("borderline") == pytest.approx(1.05)
+    assert r.skip_llm(900.0, b"\x00" * 100)
+    fixed = CodecRouter(RouterConfig(fallbacks=("raw",),
+                                     adaptive_margin=False))
+    fixed.observe(900.0, 1800.0, 100)
+    fixed.observe(2000.0, 4000.0, 100)
+    assert fixed.margin_for("adversarial") == pytest.approx(1.25)
+    assert not fixed.skip_llm(900.0, b"\x00" * 100)
+
+
+def test_adaptive_margin_ema_converges():
+    """Repeated observations EMA toward the latest regime instead of
+    locking in the first sample, and degenerate observations (zero/neg
+    sizes) are ignored."""
+    cfg = RouterConfig(fallbacks=("raw",), margin_floor=0.1,
+                       margin_ceil=10.0)
+    r = CodecRouter(cfg)
+    r.observe(2000.0, 2000.0, 100)            # rho = 1.0
+    assert r.margin_for("adversarial") == pytest.approx(1.25)
+    for _ in range(40):
+        r.observe(2000.0, 4000.0, 100)        # regime shifts 2x hot
+    assert r.margin_for("adversarial") == pytest.approx(0.625, rel=1e-3)
+    before = r.margin_for("adversarial")
+    r.observe(0.0, 4000.0, 100)
+    r.observe(2000.0, 0.0, 100)
+    assert r.margin_for("adversarial") == before
+
+
+def test_compressor_feeds_router_calibration():
+    """End to end: an auto-routed compress feeds probe-vs-realized
+    observations back into the router for every chunk that produced an
+    LLM stream — the calibration state is non-empty afterwards."""
+    comp = _comp(container_version=5, route="auto",
+                 router=RouterConfig(fallbacks=("raw",)))
+    toks = np.concatenate([golden_self_tokens(32, seed=31),
+                           golden_tokens(32, seed=32, vocab=VOCAB - 1)])
+    comp.compress(toks)
+    assert comp.router._calibration          # at least one class observed
+
+
 # ------------------------------------------------------------------ CLI
 def _friendly_bytes(pred, n):
     """Bytes the byte-level predictor finds maximally predictable: an
