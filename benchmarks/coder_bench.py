@@ -26,6 +26,8 @@ import numpy as np
 
 sys.path[:0] = ["src", "."]
 
+from repro.obs import console  # noqa: E402
+
 PRECISION = 16
 ALPHABET = 33            # top-K=32 + escape slot: the production shape
 BATCHES = (1, 16, 64)
@@ -100,9 +102,9 @@ def main() -> int:
     T = args.tokens or (200 if args.smoke else 4000)
     rng = np.random.default_rng(0)
 
-    print(f"# coder_bench: alphabet={ALPHABET} precision={PRECISION} "
+    console(f"# coder_bench: alphabet={ALPHABET} precision={PRECISION} "
           f"tokens/stream={T}")
-    print(f"{'B':>4} {'ac_ksym/s':>10} {'rans_ksym/s':>12} {'speedup':>8} "
+    console(f"{'B':>4} {'ac_ksym/s':>10} {'rans_ksym/s':>12} {'speedup':>8} "
           f"{'ac_B':>8} {'rans_B':>8}")
     csv_rows = []
     speedup_64 = 0.0
@@ -118,25 +120,25 @@ def main() -> int:
         speedup = rn_ks / ac_ks
         if B == 64:
             speedup_64 = speedup
-        print(f"{B:>4} {ac_ks:>10.0f} {rn_ks:>12.0f} {speedup:>7.1f}x "
+        console(f"{B:>4} {ac_ks:>10.0f} {rn_ks:>12.0f} {speedup:>7.1f}x "
               f"{ac_bytes:>8} {rn_bytes:>8}")
         csv_rows.append(
             f"coder_bench_B{B},{(ac_enc + ac_dec + rn_enc + rn_dec) / n * 1e6:.2f},"
             f"ac_ksym_s={ac_ks:.0f};rans_ksym_s={rn_ks:.0f};"
             f"speedup={speedup:.1f}")
-    print("\n# CSV (name,us_per_call,derived)")
+    console("\n# CSV (name,us_per_call,derived)")
     for row in csv_rows:
-        print(row)
+        console(row)
     from repro import obs
     reg = obs.registry()
-    print(f"# registry: rans.streams_flushed="
+    console(f"# registry: rans.streams_flushed="
           f"{reg.value('rans.streams_flushed')} rans.stream_bytes="
           f"{reg.value('rans.stream_bytes')}")
     if args.smoke:
         return 0
     if speedup_64 < 5.0:
-        print(f"FAIL: rANS speedup at B=64 is {speedup_64:.1f}x < 5x",
-              file=sys.stderr)
+        console(f"FAIL: rANS speedup at B=64 is {speedup_64:.1f}x < 5x",
+              err=True)
         return 1
     return 0
 

@@ -36,6 +36,8 @@ import numpy as np
 
 sys.path[:0] = ["src", "."]
 
+from repro.obs import console  # noqa: E402
+
 RATIO_FLOOR = 1.10      # carried vs context-free container size
 PREFILL_FLOOR = 1.3     # cache-off vs cache-on prefill lane-steps
 K = 8                   # model order == carry window
@@ -229,26 +231,26 @@ def main() -> None:
         ratio = run_ratio_bench()
         prefill = run_prefill_bench()
 
-    print("\n== context_ratio (carried vs context-free v6) ==")
-    print(f"corpus {ratio['n_tokens']} tokens / {ratio['n_chunks']} chunks: "
+    console("\n== context_ratio (carried vs context-free v6) ==")
+    console(f"corpus {ratio['n_tokens']} tokens / {ratio['n_chunks']} chunks: "
           f"fresh {ratio['fresh_bytes']}B carried {ratio['carried_bytes']}B "
           f"-> {ratio['ratio_gain']:.3f}x "
           f"(floor {RATIO_FLOOR}x, "
           f"{'ok' if ratio['gate_pass'] else 'FAIL'})")
-    print(f"prefix cache: {prefill['cache_hits']} hits / "
+    console(f"prefix cache: {prefill['cache_hits']} hits / "
           f"{prefill['cache_misses']} misses, "
           f"{prefill['tokens_reused']} tokens reused; prefill steps "
           f"{prefill['prefill_steps_off']} -> {prefill['prefill_steps_on']} "
           f"= {prefill['prefill_savings']:.2f}x "
           f"(floor {PREFILL_FLOOR}x, "
           f"{'ok' if prefill['gate_pass'] else 'FAIL'})")
-    print(f"context_ratio,{ratio['t_carried_s'] * 1e6:.1f},"
+    console(f"context_ratio,{ratio['t_carried_s'] * 1e6:.1f},"
           f"gain={ratio['ratio_gain']:.3f};pass={ratio['gate_pass']}")
-    print(f"context_prefill,{prefill['wall_on_s'] * 1e6:.1f},"
+    console(f"context_prefill,{prefill['wall_on_s'] * 1e6:.1f},"
           f"savings={prefill['prefill_savings']:.2f};"
           f"hits={prefill['cache_hits']};pass={prefill['gate_pass']}")
     if not (ratio["gate_pass"] and prefill["gate_pass"]):
-        print("FAIL: context gate", file=sys.stderr)
+        console("FAIL: context gate", err=True)
         sys.exit(1)
 
 

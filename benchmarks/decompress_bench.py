@@ -37,6 +37,8 @@ import numpy as np
 
 sys.path[:0] = ["src", "."]
 
+from repro.obs import console  # noqa: E402
+
 from benchmarks.service_bench import TablePredictor  # noqa: E402
 
 SPEEDUP_FLOOR = 2.0
@@ -84,7 +86,7 @@ def predictable_workload(pred, rng, n_jobs, n_tokens, q):
 
 
 def run_bench(n_jobs=4, tokens=2048, slots=8, chunk=128, topk=8, draft_k=6,
-              q=0.98, dispatch_ms=1.0, seed=0, log=print):
+              q=0.98, dispatch_ms=1.0, seed=0, log=console):
     from repro.core import LLMCompressor
 
     pred = LatencyPredictor()
@@ -164,7 +166,7 @@ def main() -> int:
         res = run_bench(n_jobs=2, tokens=1024, slots=4, dispatch_ms=0.5)
     else:
         res = run_bench()
-    print(f"decompress_throughput,{1e6 / max(1e-9, res['spec_tok_per_s']):.3f},"
+    console(f"decompress_throughput,{1e6 / max(1e-9, res['spec_tok_per_s']):.3f},"
           f"wall_speedup={res['wall_speedup']:.2f};"
           f"dispatch_ratio={res['dispatch_ratio']:.2f};"
           f"tok_per_s={res['spec_tok_per_s']:.0f}")
@@ -173,20 +175,20 @@ def main() -> int:
     offered = reg.value("spec.drafted_tokens")
     acc = reg.value("spec.drafted_accepted")
     if offered:
-        print(f"# registry: spec.rounds={reg.value('spec.rounds')} "
+        console(f"# registry: spec.rounds={reg.value('spec.rounds')} "
               f"spec.rollbacks={reg.value('spec.rollbacks')} "
               f"draft_acceptance={acc / offered:.3f}")
     ok = True
     if res["dispatch_ratio"] < DISPATCH_FLOOR:
-        print(f"FAIL: dispatch ratio {res['dispatch_ratio']:.2f}x < "
-              f"{DISPATCH_FLOOR}x", file=sys.stderr)
+        console(f"FAIL: dispatch ratio {res['dispatch_ratio']:.2f}x < "
+              f"{DISPATCH_FLOOR}x", err=True)
         ok = False
     if res["wall_speedup"] < SPEEDUP_FLOOR:
-        print(f"FAIL: wall speedup {res['wall_speedup']:.2f}x < "
-              f"{SPEEDUP_FLOOR}x", file=sys.stderr)
+        console(f"FAIL: wall speedup {res['wall_speedup']:.2f}x < "
+              f"{SPEEDUP_FLOOR}x", err=True)
         ok = False
     if ok:
-        print(f"PASS: speculative decode {res['wall_speedup']:.2f}x wall, "
+        console(f"PASS: speculative decode {res['wall_speedup']:.2f}x wall, "
               f"{res['dispatch_ratio']:.2f}x dispatches "
               f">= {SPEEDUP_FLOOR}x / {DISPATCH_FLOOR}x floors")
     return 0 if ok else 1

@@ -1,12 +1,24 @@
 """Aggregate dry-run cell JSONs into the §Roofline / §Dry-run tables.
 
+With ``--measured FILE`` (a JSON object mapping ``"arch/shape"`` to a
+measured per-step wall time in seconds) the summary additionally emits
+the **attainment** column — ``t_star / measured``, the fraction of the
+binding compute/memory/collective bound each config actually achieves
+(DESIGN.md §13; the ROADMAP's "as fast as the hardware allows" signal).
+
   PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md]
+  PYTHONPATH=src python -m benchmarks.roofline --measured steps.json
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import sys
+
+sys.path[:0] = ["src", "."]
+
+from repro.obs import console  # noqa: E402
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
 
@@ -24,6 +36,24 @@ def load(mesh: str, tag: str = "") -> dict:
         d = json.loads(p.read_text())
         out[(d["arch"], d["shape"])] = d
     return out
+
+
+def _render(hdr: list, rows: list, md: bool) -> str:
+    widths = [max(len(h), *(len(row[i]) for row in rows)) if rows else len(h)
+              for i, h in enumerate(hdr)]
+    sep = " | " if md else "  "
+    if md:
+        lines = ["| " + sep.join(h.ljust(w)
+                                 for h, w in zip(hdr, widths)) + " |",
+                 "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
+        for row in rows:
+            lines.append("| " + sep.join(c.ljust(w)
+                                         for c, w in zip(row, widths)) + " |")
+    else:
+        lines = [sep.join(h.ljust(w) for h, w in zip(hdr, widths))]
+        for row in rows:
+            lines.append(sep.join(c.ljust(w) for c, w in zip(row, widths)))
+    return "\n".join(lines)
 
 
 def fmt_table(cells: dict, md=False) -> str:
@@ -45,27 +75,49 @@ def fmt_table(cells: dict, md=False) -> str:
                 f"{r['t_collective_s']:.3f}", r["bottleneck"],
                 f"{r['useful_flops_ratio']:.2f}",
                 f"{r['roofline_fraction']:.3f}", f"{mem:.2f}"])
-    widths = [max(len(h), *(len(row[i]) for row in rows)) if rows else len(h)
-              for i, h in enumerate(hdr)]
-    sep = " | " if md else "  "
-    lines = [sep.join(h.ljust(w) for h, w in zip(hdr, widths))]
-    if md:
-        lines.insert(0, "| " + lines[0] + " |")
-        lines[0] = "| " + sep.join(h.ljust(w) for h, w in zip(hdr, widths)) + " |"
-        lines = [lines[0],
-                 "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
-        for row in rows:
-            lines.append("| " + sep.join(c.ljust(w)
-                                         for c, w in zip(row, widths)) + " |")
-    else:
-        for row in rows:
-            lines.append(sep.join(c.ljust(w) for c, w in zip(row, widths)))
-    return "\n".join(lines)
+    return _render(hdr, rows, md)
 
 
-def summarize(mesh="single", md=False, tag=""):
+def cell_t_star(r: dict) -> float:
+    """Binding roofline bound for a stored cell's roofline dict —
+    recorded directly by newer cells, derived for pre-§13 artifacts."""
+    if "t_star_s" in r:
+        return float(r["t_star_s"])
+    return max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+
+
+def attainment_rows(cells: dict, measured: dict) -> list:
+    """(arch, shape, t_star, measured_s, attainment, bottleneck) per
+    cell that has a measured step time. ``measured`` maps
+    ``"arch/shape"`` -> wall seconds per step."""
+    out = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((a, s))
+            if d is None or "skipped" in d:
+                continue
+            m = measured.get(f"{a}/{s}")
+            if m is None or not m > 0:
+                continue
+            r = d["roofline"]
+            t_star = cell_t_star(r)
+            out.append((a, s, t_star, float(m),
+                        t_star / float(m) if t_star else 0.0,
+                        r["bottleneck"]))
+    return out
+
+
+def attainment_table(cells: dict, measured: dict, md=False) -> str:
+    hdr = ["arch", "shape", "t_star(s)", "measured(s)", "attainment",
+           "bottleneck"]
+    rows = [[a, s, f"{t:.4f}", f"{m:.4f}", f"{att:.3f}", bn]
+            for a, s, t, m, att, bn in attainment_rows(cells, measured)]
+    return _render(hdr, rows, md)
+
+
+def summarize(mesh="single", md=False, tag="", measured=None):
     cells = load(mesh, tag)
-    print(fmt_table(cells, md=md))
+    console(fmt_table(cells, md=md))
     ok = [d for d in cells.values() if "skipped" not in d]
     if not ok:
         return
@@ -73,11 +125,20 @@ def summarize(mesh="single", md=False, tag=""):
     coll = max(ok, key=lambda d: d["roofline"]["t_collective_s"] /
                max(1e-12, max(d["roofline"]["t_compute_s"],
                               d["roofline"]["t_memory_s"])))
-    print(f"\ncells: {len(cells)} ({len(ok)} compiled, "
-          f"{len(cells)-len(ok)} skipped)")
-    print(f"worst roofline fraction: {worst['arch']}/{worst['shape']} "
-          f"({worst['roofline']['roofline_fraction']:.4f})")
-    print(f"most collective-bound: {coll['arch']}/{coll['shape']}")
+    console(f"\ncells: {len(cells)} ({len(ok)} compiled, "
+            f"{len(cells)-len(ok)} skipped)")
+    console(f"worst roofline fraction: {worst['arch']}/{worst['shape']} "
+            f"({worst['roofline']['roofline_fraction']:.4f})")
+    console(f"most collective-bound: {coll['arch']}/{coll['shape']}")
+    if measured:
+        rows = attainment_rows(cells, measured)
+        console("\nmeasured vs roofline:")
+        console(attainment_table(cells, measured, md=md))
+        if rows:
+            best = max(rows, key=lambda r: r[4])
+            worst_a = min(rows, key=lambda r: r[4])
+            console(f"attainment: best {best[0]}/{best[1]} ({best[4]:.3f}), "
+                    f"worst {worst_a[0]}/{worst_a[1]} ({worst_a[4]:.3f})")
 
 
 def main():
@@ -85,8 +146,14 @@ def main():
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--md", action="store_true")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--measured", default="",
+                    help="JSON file: {'arch/shape': step_seconds} -> "
+                         "adds the attainment table")
     args = ap.parse_args()
-    summarize(args.mesh, args.md, args.tag)
+    measured = None
+    if args.measured:
+        measured = json.loads(pathlib.Path(args.measured).read_text())
+    summarize(args.mesh, args.md, args.tag, measured=measured)
 
 
 if __name__ == "__main__":

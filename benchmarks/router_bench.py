@@ -37,6 +37,8 @@ import numpy as np
 
 sys.path[:0] = ["src", "."]
 
+from repro.obs import console  # noqa: E402
+
 CHUNK = 64
 SLACK = 0.98        # routed >= max(llm, fallback) * SLACK, per segment
 
@@ -159,25 +161,25 @@ def main() -> int:
     args = ap.parse_args()
     n = args.bytes or (1024 if args.smoke else 8192)
     res = run_bench(seg_bytes=n)
-    print(f"# router_bench: chunk={CHUNK} seg_bytes={n} "
+    console(f"# router_bench: chunk={CHUNK} seg_bytes={n} "
           f"fallback={res['fallback_codec']}")
-    print(f"{'segment':16s} {'llm':>7} {'fallback':>9} {'routed':>7} "
+    console(f"{'segment':16s} {'llm':>7} {'fallback':>9} {'routed':>7} "
           f"{'floor':>7} {'probe_ovh':>9}  gate")
     rows = []
     for name, s in res["segments"].items():
-        print(f"{name:16s} {s['llm']:>7.3f} {s['fallback']:>9.3f} "
+        console(f"{name:16s} {s['llm']:>7.3f} {s['fallback']:>9.3f} "
               f"{s['routed']:>7.3f} {s['floor']:>7.3f} "
               f"{s['probe_overhead']:>8.2f}x  "
               f"{'ok' if s['pass'] else 'FAIL'}")
         rows.append(f"router_bench_{name},0.0,"
                     f"llm={s['llm']};fb={s['fallback']};"
                     f"routed={s['routed']};pass={s['pass']}")
-    print("\n# CSV (name,us_per_call,derived)")
+    console("\n# CSV (name,us_per_call,derived)")
     for row in rows:
-        print(row)
+        console(row)
     if not res["gate_pass"]:
-        print("FAIL: routed ratio fell below max(llm, fallback) - 2% "
-              "on at least one segment", file=sys.stderr)
+        console("FAIL: routed ratio fell below max(llm, fallback) - 2% "
+              "on at least one segment", err=True)
         return 1
     return 0
 

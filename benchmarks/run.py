@@ -1,6 +1,8 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows plus the full result tables.
+Prints ``name,us_per_call,derived`` rows plus the full result tables, and
+appends one schema-versioned record per bench to ``results/history.jsonl``
+(the bench trajectory ``tools/bench_regress.py`` gates on — DESIGN.md §13).
 Measured on this container's CPU with the small byte-level predictors
 (paper's 1B-14B models scaled down; trends are the claims under test —
 see EXPERIMENTS.md for the claim-by-claim comparison with the paper).
@@ -17,14 +19,19 @@ import time
 
 import numpy as np
 
+sys.path[:0] = ["src", "."]
+
+from repro.obs import console  # noqa: E402
+
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
-CSV_ROWS: list[str] = []
+#: (name, us_per_call, derived) staged by _csv; main() drains the stage
+#: into the history store after each bench (with that bench's registry).
+ROWS: list[tuple[str, float, str]] = []
 
 
 def _csv(name: str, us: float, derived: str):
-    row = f"{name},{us:.1f},{derived}"
-    CSV_ROWS.append(row)
-    print(row, flush=True)
+    ROWS.append((name, us, derived))
+    console(f"{name},{us:.1f},{derived}")
 
 
 def _compressor(pred, chunk=64, topk=32, batch=32):
@@ -59,11 +66,11 @@ def table2_information(quick=False):
     rows["llm_generated"] = analyze(llm_dataset("wiki", n).decode("latin1"))
     rows["human_generated"] = analyze(human_dataset("wiki", n).decode("latin1"))
     rows["machine_structured"] = analyze(structured.decode("latin1"))
-    print("\n== table2_information (entropy/byte, MI, top-10 n-gram coverage) ==")
+    console("\n== table2_information (entropy/byte, MI, top-10 n-gram coverage) ==")
     keys = list(next(iter(rows.values())))
-    print(f"{'dataset':22s} " + " ".join(f"{k[:12]:>12s}" for k in keys))
+    console(f"{'dataset':22s} " + " ".join(f"{k[:12]:>12s}" for k in keys))
     for name, r in rows.items():
-        print(f"{name:22s} " + " ".join(f"{r[k]:12.3f}" for k in keys))
+        console(f"{name:22s} " + " ".join(f"{r[k]:12.3f}" for k in keys))
     _csv("table2_information", (time.time() - t0) * 1e6 / 3,
          f"llm_MI={rows['llm_generated']['mutual_info_bits']}")
     (RESULTS / "table2_information.json").write_text(json.dumps(rows, indent=1))
@@ -76,12 +83,12 @@ def table3_traditional(quick=False):
     from repro.core.baselines import run_baselines
     n = 4096 if quick else 8192
     doms = ("wiki", "code", "math")
-    print("\n== table3_traditional (compression ratios) ==")
+    console("\n== table3_traditional (compression ratios) ==")
     out = {}
     t0 = time.time()
     for d in doms:
         out[d] = run_baselines(llm_dataset(d, n))
-        print(f"{d:10s} " + " ".join(f"{k}={v:5.2f}" for k, v in out[d].items()))
+        console(f"{d:10s} " + " ".join(f"{k}={v:5.2f}" for k, v in out[d].items()))
     _csv("table3_traditional", (time.time() - t0) * 1e6 / len(doms),
          f"wiki_lzma={out['wiki']['lzma']}")
     (RESULTS / "table3_traditional.json").write_text(json.dumps(out, indent=1))
@@ -96,7 +103,7 @@ def table5_main(quick=False):
     n = 3072 if quick else 6144
     doms = DOMAINS[:4] if quick else DOMAINS
     pred = predictor("pred-base")
-    print("\n== table5_main (ratios; ours = pred-base LLM compressor) ==")
+    console("\n== table5_main (ratios; ours = pred-base LLM compressor) ==")
     table = {}
     t0 = time.time()
     for i, d in enumerate(doms):
@@ -106,7 +113,7 @@ def table5_main(quick=False):
         row["ours_llm"] = round(r, 3)
         row["ours_bits_per_byte"] = round(8.0 / r, 3)
         table[d] = row
-        print(f"{d:10s} " + " ".join(f"{k}={v:6.2f}" for k, v in row.items()))
+        console(f"{d:10s} " + " ".join(f"{k}={v:6.2f}" for k, v in row.items()))
     avg_ours = np.mean([r["ours_llm"] for r in table.values()])
     avg_gzip = np.mean([r["gzip"] for r in table.values()])
     _csv("table5_main", (time.time() - t0) * 1e6 / len(doms),
@@ -122,13 +129,13 @@ def fig_chunk_size(quick=False):
     pred = predictor("pred-base")
     data = llm_dataset("wiki", 3072 if quick else 6144)
     chunks = (16, 32, 64) if quick else (16, 32, 64, 128, 256)
-    print("\n== fig_chunk_size (ratio vs chunk) ==")
+    console("\n== fig_chunk_size (ratio vs chunk) ==")
     t0 = time.time()
     out = {}
     for c in chunks:
         r, dt, _ = _ratio(pred, data, chunk=c)
         out[c] = round(r, 3)
-        print(f"chunk={c:4d} ratio={r:.3f}")
+        console(f"chunk={c:4d} ratio={r:.3f}")
     _csv("fig_chunk_size", (time.time() - t0) * 1e6 / len(chunks),
          ";".join(f"c{c}={v}" for c, v in out.items()))
     (RESULTS / "fig_chunk_size.json").write_text(
@@ -143,14 +150,14 @@ def fig_model_size(quick=False):
     data = llm_dataset("wiki", 3072 if quick else 6144)
     names = ("pred-tiny", "pred-small") if quick else \
         ("pred-tiny", "pred-small", "pred-base")
-    print("\n== fig_model_size (ratio vs params) ==")
+    console("\n== fig_model_size (ratio vs params) ==")
     t0 = time.time()
     out = {}
     for n in names:
         pred = predictor(n)
         r, _, _ = _ratio(pred, data)
         out[n] = {"params": count_params(pred.cfg), "ratio": round(r, 3)}
-        print(f"{n:12s} params={out[n]['params']:>10,d} ratio={r:.3f}")
+        console(f"{n:12s} params={out[n]['params']:>10,d} ratio={r:.3f}")
     _csv("fig_model_size", (time.time() - t0) * 1e6 / len(names),
          ";".join(f"{k}={v['ratio']}" for k, v in out.items()))
     (RESULTS / "fig_model_size.json").write_text(json.dumps(out))
@@ -164,7 +171,7 @@ def fig_data_scale(quick=False):
     from repro.core.baselines import gzip_ratio, lzma_ratio
     pred = predictor("pred-base")
     sizes = (2048, 4096) if quick else (2048, 4096, 8192, 16384)
-    print("\n== fig_data_scale ==")
+    console("\n== fig_data_scale ==")
     t0 = time.time()
     out = {}
     for n in sizes:
@@ -172,7 +179,7 @@ def fig_data_scale(quick=False):
         r, _, _ = _ratio(pred, data)
         out[n] = {"ours": round(r, 3), "gzip": round(gzip_ratio(data), 3),
                   "lzma": round(lzma_ratio(data), 3)}
-        print(f"n={n:6d} ours={out[n]['ours']:.3f} gzip={out[n]['gzip']:.3f} "
+        console(f"n={n:6d} ours={out[n]['ours']:.3f} gzip={out[n]['gzip']:.3f} "
               f"lzma={out[n]['lzma']:.3f}")
     spread = max(v['ours'] for v in out.values()) - \
         min(v['ours'] for v in out.values())
@@ -194,7 +201,7 @@ def fig9_human_vs_llm(quick=False):
     hum = human_dataset("web", n, seed=5)          # in-training-distribution
     hum_ood = human_like_ood("web", n, seed=5)     # realistic (OOV mass)
     chunks = (16, 64) if quick else (16, 32, 64, 128)
-    print("\n== fig9_human_vs_llm ==")
+    console("\n== fig9_human_vs_llm ==")
     t0 = time.time()
     out = {}
     for c in chunks:
@@ -205,7 +212,7 @@ def fig9_human_vs_llm(quick=False):
                   "human_ood": round(ro, 3),
                   "gap_indist": round(rg / rh, 3),
                   "gap_ood": round(rg / ro, 3)}
-        print(f"chunk={c:4d} llm_gen={rg:.3f} human_indist={rh:.3f} "
+        console(f"chunk={c:4d} llm_gen={rg:.3f} human_indist={rh:.3f} "
               f"human_ood={ro:.3f} gap={rg/rh:.2f}/{rg/ro:.2f}x")
     _csv("fig9_human_vs_llm", (time.time() - t0) * 1e6 / len(chunks),
          ";".join(f"c{c}_gap={v['gap_indist']}/{v['gap_ood']}"
@@ -224,7 +231,7 @@ def fig8_domain_models(quick=False):
     from repro.serve.engine import ModelPredictor
     from repro.data.tokenizer import BOS_ID
     data = human_dataset("math", 3072 if quick else 6144, seed=41)
-    print("\n== fig8_domain_models (math domain) ==")
+    console("\n== fig8_domain_models (math domain) ==")
     t0 = time.time()
     out = {}
     p_gen, cfg = train_predictor("pred-small")
@@ -234,7 +241,7 @@ def fig8_domain_models(quick=False):
         pred = ModelPredictor(params, c, bos_id=BOS_ID)
         r, _, _ = _ratio(pred, data)
         out[name] = round(r, 3)
-        print(f"{name:14s} ratio={r:.3f}")
+        console(f"{name:14s} ratio={r:.3f}")
     _csv("fig8_domain_models", (time.time() - t0) * 1e6 / 2,
          f"general={out['general-small']};domain={out['math-small']}")
     (RESULTS / "fig8_domain_models.json").write_text(json.dumps(out))
@@ -290,8 +297,8 @@ def coder_throughput(quick=False):
     for _ in range(20):
         topk_quantized_jit(lg, 64, 16)[0].block_until_ready()
     t_cdf = (time.time() - t0) / 20
-    print("\n== coder_throughput ==")
-    print(f"AC encode {n/t_enc/1e3:.0f} ksym/s | decode {n/t_dec/1e3:.0f} "
+    console("\n== coder_throughput ==")
+    console(f"AC encode {n/t_enc/1e3:.0f} ksym/s | decode {n/t_dec/1e3:.0f} "
           f"ksym/s | rANS(B=64) encode {rn/r_enc/1e3:.0f} ksym/s | decode "
           f"{rn/r_dec/1e3:.0f} ksym/s ({speedup:.1f}x) | "
           f"topk-CDF (64x4096) {t_cdf*1e3:.2f} ms/call")
@@ -345,10 +352,11 @@ def decompress_throughput(quick=False):
 
 
 def telemetry_overhead(quick=False):
-    """DESIGN.md §10 gate: running the service decode bench with the
-    metrics registry enabled must cost < 2% wall time over disabled
-    (telemetry is always byte-inert; this bounds its *time* cost too).
-    benchmarks/run.py exits non-zero when this gate fails."""
+    """DESIGN.md §10 + §13 gates: running the service decode bench with
+    the metrics registry enabled must cost < 2% wall time over disabled,
+    and with a timeline recorder installed <= 10% (telemetry is always
+    byte-inert; this bounds its *time* cost too). benchmarks/run.py
+    exits non-zero when either gate fails."""
     from benchmarks.service_bench import run_overhead
     t0 = time.time()
     if quick:
@@ -357,6 +365,7 @@ def telemetry_overhead(quick=False):
         res = run_overhead()
     _csv("telemetry_overhead", (time.time() - t0) * 1e6,
          f"overhead_pct={res['overhead'] * 100:.2f};"
+         f"timeline_pct={res['timeline_overhead'] * 100:.2f};"
          f"pass={res['gate_pass']}")
     (RESULTS / "telemetry_overhead.json").write_text(
         json.dumps(res, indent=1))
@@ -373,9 +382,9 @@ def router_routing(quick=False):
     from benchmarks.router_bench import run_bench
     t0 = time.time()
     res = run_bench(seg_bytes=1024 if quick else 8192)
-    print("\n== router_routing (v5 ratios per traffic segment) ==")
+    console("\n== router_routing (v5 ratios per traffic segment) ==")
     for name, s in res["segments"].items():
-        print(f"{name:16s} llm={s['llm']:.3f} fb={s['fallback']:.3f} "
+        console(f"{name:16s} llm={s['llm']:.3f} fb={s['fallback']:.3f} "
               f"routed={s['routed']:.3f} "
               f"{'ok' if s['pass'] else 'FAIL'}")
     mixed = res["segments"]["mixed_traffic"]
@@ -402,8 +411,8 @@ def context_ratio(quick=False):
         prefill = run_prefill_bench()
     res = {"ratio": ratio, "prefill": prefill,
            "gate_pass": ratio["gate_pass"] and prefill["gate_pass"]}
-    print("\n== context_ratio (carried v6 vs context-free; prefix cache) ==")
-    print(f"carried gain {ratio['ratio_gain']:.3f}x "
+    console("\n== context_ratio (carried v6 vs context-free; prefix cache) ==")
+    console(f"carried gain {ratio['ratio_gain']:.3f}x "
           f"(floor {ratio['ratio_floor']}x) | prefill savings "
           f"{prefill['prefill_savings']:.2f}x "
           f"(floor {prefill['prefill_floor']}x, "
@@ -424,37 +433,42 @@ ALL = [table2_information, table3_traditional, table5_main, fig_chunk_size,
 
 def main() -> None:
     from repro import obs
+    from repro.obs.bench_history import BenchHistory, BenchRecord
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--history", default=str(RESULTS / "history.jsonl"),
+                    help="bench-trajectory JSONL this run appends to")
     args = ap.parse_args()
     RESULTS.mkdir(parents=True, exist_ok=True)
+    hist = BenchHistory(args.history)
     t0 = time.time()
     gate_failures = []
     for fn in ALL:
         if args.only and args.only not in fn.__name__:
             continue
-        # each bench runs against a fresh process-global registry, whose
-        # full snapshot (compressor/rans/draft counters, span timings)
-        # lands in results/ next to the bench's own result table
+        # each bench runs against a fresh process-global registry; its
+        # compact snapshot (compressor/rans/draft counters, span-derived
+        # phase breakdown) rides the bench's history record
         reg = obs.MetricsRegistry(name=fn.__name__)
         prev = obs.set_registry(reg)
+        n_before = len(ROWS)
         try:
             out = fn(quick=args.quick)
         finally:
             obs.set_registry(prev)
-        (RESULTS / f"BENCH_{fn.__name__}.metrics.json").write_text(
-            reg.to_json())
+        for name, us, derived in ROWS[n_before:]:
+            hist.append(BenchRecord.build(name, us, derived, registry=reg,
+                                          quick=args.quick))
         if isinstance(out, dict) and out.get("gate_pass") is False:
             gate_failures.append(fn.__name__)
-    print(f"\n# total {time.time()-t0:.0f}s")
-    print("\n# CSV (name,us_per_call,derived)")
-    for row in CSV_ROWS:
-        print(row)
-    (RESULTS / "bench_csv.txt").write_text("\n".join(CSV_ROWS))
+    console(f"\n# total {time.time()-t0:.0f}s")
+    console("\n# rows appended to " + str(hist.path))
+    for name, us, derived in ROWS:
+        console(f"{name},{us:.1f},{derived}")
     if gate_failures:
-        print(f"FAIL: benchmark gate(s): {', '.join(gate_failures)}",
-              file=sys.stderr)
+        console(f"FAIL: benchmark gate(s): {', '.join(gate_failures)}",
+                err=True)
         sys.exit(1)
 
 

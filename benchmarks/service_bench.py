@@ -31,8 +31,11 @@ import numpy as np
 
 sys.path[:0] = ["src", "."]
 
+from repro.obs import console  # noqa: E402
+
 SPEEDUP_FLOOR = 1.5
 OVERHEAD_LIMIT = 0.02          # telemetry-enabled slowdown budget (§10)
+TIMELINE_LIMIT = 0.10          # timeline-recording slowdown budget (§13)
 OVERHEAD_ABS_SLACK_S = 0.010   # absolute per-leg jitter allowance
 
 
@@ -83,7 +86,7 @@ def ragged_workload(rng, n_jobs: int, slots: int, chunk: int):
     return [rng.integers(0, 60, n).astype(np.int32) for n in sizes]
 
 
-def run_bench(n_jobs=24, slots=8, chunk=32, topk=8, seed=0, log=print):
+def run_bench(n_jobs=24, slots=8, chunk=32, topk=8, seed=0, log=console):
     from repro.core import LLMCompressor
     from repro.service import CompressionService
 
@@ -137,7 +140,7 @@ def run_bench(n_jobs=24, slots=8, chunk=32, topk=8, seed=0, log=print):
     }
 
 
-def run_mixed(slots=8, chunk=32, topk=8, seed=1, log=print):
+def run_mixed(slots=8, chunk=32, topk=8, seed=1, log=console):
     """Mixed-direction traffic demo: compress and decompress jobs share
     the same batch; verified lossless. Reported, not asserted — the
     speedup claim is the decode comparison above."""
@@ -168,16 +171,28 @@ def run_mixed(slots=8, chunk=32, topk=8, seed=1, log=print):
 
 
 def run_overhead(n_jobs=24, slots=8, chunk=32, topk=8, repeats=5, seed=0,
-                 log=print):
+                 log=console):
     """Telemetry-overhead gate (DESIGN.md §10): the same ragged decode
     workload through two services — registry enabled vs disabled —
     interleaved, min-of-repeats (min is the noise-robust estimator for a
-    deterministic workload). Decoded tokens are compared against the
-    originals every repeat on both legs: telemetry must never change
-    output bytes. Budget: enabled <= disabled * (1 + 2%) + 10ms absolute
-    slack; override with $REPRO_TELEMETRY_OVERHEAD_MAX."""
+    deterministic workload) — plus a third leg with a timeline recorder
+    installed (DESIGN.md §13: every-step scheduler spans + event ring
+    writes). Decoded tokens are compared against the originals every
+    repeat on all legs: telemetry must never change output bytes.
+    Budgets: enabled <= disabled * (1 + 2%) + 10ms absolute slack;
+    recording <= *enabled* * (1 + 10%) + the same slack — the recorder
+    requires the registry, so its budget bounds the marginal cost of
+    the timeline on top of telemetry (the budgets compose: disabled ->
+    recording is bounded by both chained together). The timeline leg is
+    judged on the MEDIAN of per-round recording/enabled ratios: adjacent
+    legs share one drift regime, so the ratio cancels the low-frequency
+    CPU noise that min-of-repeats cannot (each min may come from a
+    different regime). Override with $REPRO_TELEMETRY_OVERHEAD_MAX /
+    $REPRO_TIMELINE_OVERHEAD_MAX."""
     import os
+    import statistics
 
+    from repro import obs
     from repro.core import LLMCompressor
     from repro.service import CompressionService
 
@@ -188,36 +203,59 @@ def run_overhead(n_jobs=24, slots=8, chunk=32, topk=8, repeats=5, seed=0,
                          decode_batch=slots, container_version=4)
     blobs = [comp.compress(d)[0] for d in datas]
 
-    def leg(enabled):
-        svc = CompressionService(pred, slots=slots, chunk_size=chunk,
-                                 topk=topk)
+    def leg(enabled, record=False):
+        svc = CompressionService(
+            pred, slots=slots, chunk_size=chunk, topk=topk,
+            trace=obs.TimelineRecorder() if record else None)
         svc.registry.enabled = enabled
         t0 = time.perf_counter()
         handles = [svc.submit_decompress(b) for b in blobs]
         outs = [h.result() for h in handles]
         dt = time.perf_counter() - t0
-        for o, d in zip(outs, datas):
+        if record:
+            svc.close()             # uninstall the recorder before the
+        for o, d in zip(outs, datas):    # next (untraced) leg runs
             assert np.array_equal(o, d), \
                 f"LOSSLESS VIOLATION (telemetry enabled={enabled})"
         return dt
 
-    best = {True: float("inf"), False: float("inf")}
-    leg(True)                       # warm both paths outside the clocks
+    inf = float("inf")
+    best = {"disabled": inf, "enabled": inf, "recording": inf}
+    ratios = []
+    leg(True)                       # warm all paths outside the clocks
     leg(False)
-    for _ in range(repeats):
-        for enabled in (False, True):    # interleaved: drift-fair
-            best[enabled] = min(best[enabled], leg(enabled))
+    leg(True, record=True)
+    for _ in range(repeats):        # interleaved: drift-fair
+        best["disabled"] = min(best["disabled"], leg(False))
+        t_ena = leg(True)
+        t_rec = leg(True, record=True)
+        best["enabled"] = min(best["enabled"], t_ena)
+        best["recording"] = min(best["recording"], t_rec)
+        ratios.append(t_rec / max(1e-9, t_ena))
     limit = float(os.environ.get("REPRO_TELEMETRY_OVERHEAD_MAX",
                                  OVERHEAD_LIMIT))
-    overhead = best[True] / max(1e-9, best[False]) - 1.0
-    ok = best[True] <= best[False] * (1.0 + limit) + OVERHEAD_ABS_SLACK_S
-    log(f"telemetry overhead: enabled {best[True] * 1e3:.1f}ms vs "
-        f"disabled {best[False] * 1e3:.1f}ms -> {overhead * 100:+.2f}% "
+    tl_limit = float(os.environ.get("REPRO_TIMELINE_OVERHEAD_MAX",
+                                    TIMELINE_LIMIT))
+    overhead = best["enabled"] / max(1e-9, best["disabled"]) - 1.0
+    tl_overhead = statistics.median(ratios) - 1.0
+    ok = best["enabled"] <= best["disabled"] * (1.0 + limit) \
+        + OVERHEAD_ABS_SLACK_S
+    tl_ok = tl_overhead <= tl_limit \
+        + OVERHEAD_ABS_SLACK_S / max(1e-9, best["enabled"])
+    log(f"telemetry overhead: enabled {best['enabled'] * 1e3:.1f}ms vs "
+        f"disabled {best['disabled'] * 1e3:.1f}ms -> {overhead * 100:+.2f}% "
         f"(budget {limit * 100:.0f}%) {'PASS' if ok else 'FAIL'}")
-    return {"enabled_s": best[True], "disabled_s": best[False],
-            "overhead": overhead, "limit": limit, "repeats": repeats,
+    log(f"timeline overhead: recording {best['recording'] * 1e3:.1f}ms vs "
+        f"enabled {best['enabled'] * 1e3:.1f}ms, median round ratio "
+        f"{tl_overhead * 100:+.2f}% (budget {tl_limit * 100:.0f}%) "
+        f"{'PASS' if tl_ok else 'FAIL'}")
+    return {"enabled_s": best["enabled"], "disabled_s": best["disabled"],
+            "recording_s": best["recording"],
+            "overhead": overhead, "limit": limit,
+            "timeline_overhead": tl_overhead, "timeline_limit": tl_limit,
+            "repeats": repeats,
             "n_jobs": n_jobs, "slots": slots, "chunk": chunk,
-            "gate_pass": ok}
+            "gate_pass": ok and tl_ok}
 
 
 def main() -> int:
@@ -233,25 +271,28 @@ def main() -> int:
         res = run_bench()
     run_mixed(slots=4 if args.smoke else 8,
               chunk=16 if args.smoke else 32)
-    print(f"service_throughput,{1e6 / max(1e-9, res['service_jobs_per_s']):.1f},"
-          f"step_speedup={res['step_speedup']:.2f};"
-          f"occupancy={res['occupancy']:.2f};"
-          f"jobs_per_s={res['service_jobs_per_s']:.2f}")
+    console(f"service_throughput,"
+            f"{1e6 / max(1e-9, res['service_jobs_per_s']):.1f},"
+            f"step_speedup={res['step_speedup']:.2f};"
+            f"occupancy={res['occupancy']:.2f};"
+            f"jobs_per_s={res['service_jobs_per_s']:.2f}")
     if res["wall_speedup"] < SPEEDUP_FLOOR:
-        print(f"FAIL: jobs/sec speedup {res['wall_speedup']:.2f}x < "
-              f"{SPEEDUP_FLOOR}x on ragged workload", file=sys.stderr)
+        console(f"FAIL: jobs/sec speedup {res['wall_speedup']:.2f}x < "
+                f"{SPEEDUP_FLOOR}x on ragged workload", err=True)
         return 1
-    print(f"PASS: jobs/sec speedup {res['wall_speedup']:.2f}x >= "
-          f"{SPEEDUP_FLOOR}x (model steps: {res['step_speedup']:.2f}x, "
-          f"occupancy {res['occupancy']:.2f})")
+    console(f"PASS: jobs/sec speedup {res['wall_speedup']:.2f}x >= "
+            f"{SPEEDUP_FLOOR}x (model steps: {res['step_speedup']:.2f}x, "
+            f"occupancy {res['occupancy']:.2f})")
     if args.overhead:
         if args.smoke:
             ores = run_overhead(n_jobs=12, slots=4, chunk=16, repeats=3)
         else:
             ores = run_overhead()
         if not ores["gate_pass"]:
-            print(f"FAIL: telemetry overhead {ores['overhead'] * 100:.2f}% "
-                  f"> {ores['limit'] * 100:.0f}% budget", file=sys.stderr)
+            console(f"FAIL: telemetry overhead {ores['overhead'] * 100:.2f}%"
+                    f" (budget {ores['limit'] * 100:.0f}%) / timeline "
+                    f"{ores['timeline_overhead'] * 100:.2f}% (budget "
+                    f"{ores['timeline_limit'] * 100:.0f}%)", err=True)
             return 1
     return 0
 

@@ -4,6 +4,7 @@
                            [--slots B] [--predictor NAME] [--v3]
                            [--route auto|llm|zstd|lzma|raw] [--sidecar]
                            [--context-window W] [--shared-prefix FILE]
+                           [--trace OUT.json]
     llmc decompress IN OUT [--predictor NAME] [--sidecar]
     llmc range      IN OUT --chunks LO:HI [--predictor NAME]
     llmc info       IN
@@ -111,7 +112,18 @@ def _service(args, pred):
                               topk=args.topk,
                               precision=getattr(args, "precision",
                                                 DEFAULT_PRECISION),
-                              route=getattr(args, "route", "llm"))
+                              route=getattr(args, "route", "llm"),
+                              trace=getattr(args, "trace", None) or None)
+
+
+def _print_phases(rep) -> None:
+    """One-line per-job phase breakdown (DESIGN.md §13)."""
+    if rep is None:
+        return
+    parts = "  ".join(f"{k}={v * 1e3:.1f}ms"
+                      for k, v in sorted(rep.phases.items()) if v > 0)
+    print(f"phases ({rep.total_s * 1e3:.0f}ms wall, coverage "
+          f"{rep.coverage:.0%}): {parts}")
 
 
 def _cmd_compress(args) -> int:
@@ -126,6 +138,8 @@ def _cmd_compress(args) -> int:
         sp = encode(open(args.shared_prefix, "rb").read())
     t0 = time.time()
     handle = None
+    svc = None
+    rec = None
     if args.codec == "ac" or args.v3:
         if args.route != "llm":
             # routing needs v5 codec tags; v3 can't carry them and the
@@ -137,15 +151,37 @@ def _cmd_compress(args) -> int:
                              "service path (rans codec, no --v3) — they "
                              "write a v6 container")
         # legacy codec / wire-minimal container: grouped path
+        from repro import obs
+        if args.trace:
+            rec = obs.TimelineRecorder()
+            obs.timeline.install(rec)
         comp = LLMCompressor(pred, chunk_size=args.chunk, topk=args.topk,
                              decode_batch=args.slots, codec=args.codec,
                              container_version=3 if args.v3 else 4)
-        blob, stats = comp.compress(toks)
+        try:
+            blob, stats = comp.compress(toks)
+        finally:
+            if rec is not None and obs.timeline.active() is rec:
+                obs.timeline.uninstall()
     else:
-        handle = _service(args, pred).submit_compress(
+        svc = _service(args, pred)
+        handle = svc.submit_compress(
             toks, shared_prefix=sp, context_window=args.context_window)
         blob, stats = handle.result()
     open(args.output, "wb").write(blob)
+    if args.trace:
+        from repro import obs
+        if svc is not None:
+            rep = handle.phase_report()
+            path = svc.write_timeline()
+            svc.close()
+        else:
+            rec.save(args.trace)
+            path = args.trace
+            rep = obs.PhaseReport.from_recorder(rec)
+        print(f"timeline -> {path} (Chrome-trace JSON; load in "
+              f"chrome://tracing or ui.perfetto.dev)")
+        _print_phases(rep)
     if args.sidecar:
         from repro import obs
         if handle is not None:
@@ -290,11 +326,17 @@ def _cmd_stats(args) -> int:
               f"{sched['chunk_failures']}")
         if bpt:
             print(f"bits/token: mean {bpt['mean']:.2f}  p50 {bpt['p50']:g}"
-                  f"  p99 {bpt['p99']:g}  ({bpt['count']} chunks)")
+                  f"  p95 {bpt['p95']:g}  p99 {bpt['p99']:g}  "
+                  f"({bpt['count']} chunks)")
         acc = snap["draft_acceptance"]
         print(f"draft acceptance: "
               f"{'n/a (no speculative decode)' if acc is None else acc}")
         print(f"jobs: {snap['jobs']}")
+        phases = {k: v for k, v in (snap.get("phases") or {}).items()
+                  if v > 0}
+        if phases:
+            print("phase seconds: " + "  ".join(
+                f"{k}={v:.3f}" for k, v in sorted(phases.items())))
     else:
         import json
         print(json.dumps(snap, indent=1, default=str))
@@ -343,6 +385,11 @@ def main(argv=None) -> int:
                    help="condition stripe-head chunks on FILE's tokens "
                         "as a named shared prefix (v6; jobs sharing the "
                         "prefix reuse one prefilled KV state)")
+    p.add_argument("--trace", default="", metavar="OUT.json",
+                   help="record a span timeline of the run and export it "
+                        "as Chrome-trace JSON (chrome://tracing / "
+                        "ui.perfetto.dev), plus a per-job phase cost "
+                        "breakdown (DESIGN.md §13)")
     p.set_defaults(fn=_cmd_compress)
 
     p = sub.add_parser("decompress", help=".llmc container -> file")

@@ -38,6 +38,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 RANS_L = 1 << 23          # lower bound of the normalized state interval
 _STATE_BYTES = 4          # final state flush (state < 256 * RANS_L < 2**32)
@@ -139,6 +140,10 @@ class BatchedRansEncoder:
         """Run the coder backwards over all recorded steps and return one
         framed byte string per stream. Streams with zero recorded steps
         return ``b""`` (nothing to decode, nothing stored)."""
+        with _trace.span("rans.finish"):
+            return self._finish()
+
+    def _finish(self) -> list[bytes]:
         B = self.n_streams
         # worst case 3 payload bytes per step (bits <= 23) + state flush
         cap = 3 * (int(self._counts.max()) if B else 0) + _STATE_BYTES + 8
@@ -246,10 +251,11 @@ class SlotRansEncoder:
 
     def flush_slot(self, slot: int) -> bytes:
         """Materialize and clear one slot's stream (LIFO backward pass)."""
-        out = _encode_steps(self._steps[slot])
-        self._steps[slot] = []
-        _count_flush(1, len(out))
-        return out
+        with _trace.span("rans.flush_slot"):
+            out = _encode_steps(self._steps[slot])
+            self._steps[slot] = []
+            _count_flush(1, len(out))
+            return out
 
 
 class BatchedRansDecoder:

@@ -260,16 +260,19 @@ def route_chunks(router: CodecRouter, predictor, chunks: np.ndarray,
     after encode) or its fallback codec name (skip the model entirely).
     Returns ``(decisions, fallback_streams)`` with ``fallback_streams[i]
     = (codec_name, stream)``."""
+    from repro.obs import trace as _trace
     n_chunks = chunks.shape[0] if len(chunks) else 0
-    fb = [router.best_fallback(chunks[i, :int(valid[i])])
-          for i in range(n_chunks)]
+    with _trace.span("router.fallback"):
+        fb = [router.best_fallback(chunks[i, :int(valid[i])])
+              for i in range(n_chunks)]
     if not auto:
         return [RouteDecision(name, len(s)) for name, s in fb], fb
     if not n_chunks:
         return [], fb
-    P = min(router.config.probe_tokens, chunks.shape[1])
-    logits = np.asarray(predictor.score_chunks(chunks[:, :P]))
-    est = estimate_chunk_bits(logits, chunks, valid, P)
+    with _trace.span("router.probe"):
+        P = min(router.config.probe_tokens, chunks.shape[1])
+        logits = np.asarray(predictor.score_chunks(chunks[:, :P]))
+        est = estimate_chunk_bits(logits, chunks, valid, P)
     return [RouteDecision(name if router.skip_llm(float(est[i]), s)
                           else llm_codec, len(s), float(est[i]))
             for i, (name, s) in enumerate(fb)], fb

@@ -192,14 +192,32 @@ class Roofline:
         return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
 
     @property
+    def t_star(self) -> float:
+        """The binding roofline bound (max of the three terms): the
+        fastest a step with this op mix can possibly run."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
     def roofline_fraction(self) -> float:
         """Fraction of the binding roofline that USEFUL work represents:
         (model_flops / peak) / max(all three terms)."""
-        t_star = max(self.t_compute, self.t_memory, self.t_collective)
+        t_star = self.t_star
         if t_star == 0:
             return 0.0
         t_ideal = self.model_flops / (self.n_chips * V5E_PEAK_FLOPS)
         return t_ideal / t_star
+
+    def attainment(self, measured_s: float) -> float:
+        """Measured-vs-roofline: fraction of the hardware bound a
+        *measured* step time achieves (``t_star / measured``, in (0, 1]
+        for an honest measurement; >1 means the model or the measurement
+        is wrong — surface it, don't clamp). 0.0 when either side is
+        missing. This is the quantitative "as fast as the hardware
+        allows" signal (ROADMAP): 1.0 = step time equals the binding
+        compute/memory/collective bound."""
+        if measured_s is None or measured_s <= 0 or self.t_star <= 0:
+            return 0.0
+        return self.t_star / float(measured_s)
 
     def to_dict(self) -> dict:
         return {
@@ -210,6 +228,7 @@ class Roofline:
             "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
             "t_memory_probe_s": self.t_memory_probe,
             "t_collective_s": self.t_collective,
+            "t_star_s": self.t_star,
             "bottleneck": self.bottleneck,
             "useful_flops_ratio": self.useful_flops_ratio,
             "roofline_fraction": self.roofline_fraction,

@@ -15,6 +15,8 @@ CI-gated by ``benchmarks/run.py telemetry_overhead``).
 """
 from __future__ import annotations
 
+from . import bench_history  # noqa: F401  (BenchHistory / BenchRecord)
+from . import timeline  # noqa: F401  (TimelineRecorder / PhaseReport)
 from . import trace  # noqa: F401  (obs.trace.span / obs.trace.current)
 from .diagnostics import (  # noqa: F401
     ChunkDiagnostics,
@@ -25,6 +27,7 @@ from .diagnostics import (  # noqa: F401
 )
 from .logs import (  # noqa: F401
     configure,
+    console,
     exception_record,
     format_event,
     get_logger,
@@ -44,6 +47,7 @@ from .metrics import (  # noqa: F401
     registry,
     set_registry,
 )
+from .timeline import PhaseReport, TimelineRecorder  # noqa: F401
 from .trace import span  # noqa: F401
 
 __all__ = [
@@ -57,7 +61,11 @@ __all__ = [
     "Histogram",
     "JobDiagnostics",
     "MetricsRegistry",
+    "PhaseReport",
+    "TimelineRecorder",
+    "bench_history",
     "configure",
+    "console",
     "exception_record",
     "format_event",
     "get_logger",
@@ -69,6 +77,7 @@ __all__ = [
     "set_registry",
     "sidecar_path",
     "span",
+    "timeline",
     "trace",
     "write_sidecar",
 ]

@@ -1,0 +1,204 @@
+"""Append-only bench trajectory store (results/history.jsonl).
+
+Every ``benchmarks/run.py`` invocation appends one record per bench —
+never overwrites — so the repo accumulates a performance *trajectory*
+instead of the latest snapshot. ``tools/bench_regress.py`` gates CI on
+it: latest vs trailing median, >15% wall regression or any ratio
+regression fails (DESIGN.md §13).
+
+Record schema (``SCHEMA`` version 1), one JSON object per line::
+
+    {"schema": 1, "bench": "service_throughput", "commit": "c36df73",
+     "ts": "2026-08-08T12:00:00+00:00", "quick": false,
+     "us_per_call": 1234.5, "derived": "jobs_s=81.0;speedup=5.02",
+     "values": {"jobs_s": 81.0, "speedup": 5.02},
+     "metrics": {...compact registry snapshot...},
+     "phases": {"model": 1.2, "coder": 0.3, ...}}
+
+``values`` is ``derived`` parsed into floats — the regression gate
+reads it without re-parsing strings. ``metrics`` keeps counter/gauge
+values and histogram count/sum/quantiles, dropping bucket maps (the
+trajectory needs the summary, not the full shape). Corrupt lines are
+skipped on load (an interrupted append must not poison the trajectory).
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import pathlib
+import subprocess
+from dataclasses import dataclass, field
+from typing import Optional
+
+SCHEMA = 1
+
+#: required fields and their types (validation is structural, not
+#: value-judging — the regression gate decides what's "bad")
+_REQUIRED = {
+    "schema": int,
+    "bench": str,
+    "commit": str,
+    "ts": str,
+    "quick": bool,
+    "us_per_call": (int, float),
+    "derived": str,
+    "values": dict,
+    "metrics": dict,
+    "phases": dict,
+}
+
+
+def git_commit(repo_root=None) -> str:
+    """Short HEAD hash, or '' outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=repo_root, capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except (OSError, subprocess.SubprocessError):
+        return ""
+
+
+def parse_derived(derived: str) -> dict:
+    """'k=v;k2=v2' -> {k: float} (non-numeric values are dropped)."""
+    out = {}
+    for part in (derived or "").split(";"):
+        part = part.strip()
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        v = v.strip().rstrip("x")       # "speedup=5.02x" style
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            continue
+    return out
+
+
+def compact_metrics(snapshot: dict) -> dict:
+    """Registry snapshot -> trajectory form: scalar values, histogram
+    summaries (count/sum/mean/p50/p95/p99), no bucket maps."""
+    out = {}
+    for name, m in snapshot.items():
+        if m.get("type") == "histogram":
+            out[name] = {k: m[k] for k in
+                         ("count", "sum", "mean", "p50", "p95", "p99")
+                         if k in m}
+        else:
+            out[name] = m.get("value")
+    return out
+
+
+@dataclass
+class BenchRecord:
+    bench: str
+    us_per_call: float
+    derived: str = ""
+    commit: str = ""
+    ts: str = ""
+    quick: bool = False
+    values: dict = field(default_factory=dict)
+    metrics: dict = field(default_factory=dict)
+    phases: dict = field(default_factory=dict)
+    schema: int = SCHEMA
+
+    @classmethod
+    def build(cls, bench: str, us_per_call: float, derived: str = "",
+              registry=None, quick: bool = False,
+              commit: Optional[str] = None,
+              ts: Optional[str] = None) -> "BenchRecord":
+        """Assemble a record from a finished bench run. ``registry`` (the
+        bench's MetricsRegistry) supplies the metrics snapshot and the
+        span-derived phase breakdown."""
+        from . import timeline as _timeline
+        metrics: dict = {}
+        phases: dict = {}
+        if registry is not None:
+            metrics = compact_metrics(registry.snapshot())
+            phases = {k: round(v, 6) for k, v in
+                      _timeline.phases_from_registry(registry).items()}
+        if ts is None:
+            ts = datetime.datetime.now(datetime.timezone.utc).isoformat(
+                timespec="seconds")
+        return cls(
+            bench=bench, us_per_call=float(us_per_call), derived=derived,
+            commit=git_commit() if commit is None else commit, ts=ts,
+            quick=quick, values=parse_derived(derived), metrics=metrics,
+            phases=phases)
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": self.schema, "bench": self.bench,
+            "commit": self.commit, "ts": self.ts, "quick": self.quick,
+            "us_per_call": self.us_per_call, "derived": self.derived,
+            "values": self.values, "metrics": self.metrics,
+            "phases": self.phases,
+        }
+
+
+def validate_record(d: dict) -> list:
+    """Structural problems with a history row ([] when schema-valid)."""
+    problems = []
+    if not isinstance(d, dict):
+        return [f"record is {type(d).__name__}, not an object"]
+    for key, typ in _REQUIRED.items():
+        if key not in d:
+            problems.append(f"missing field {key!r}")
+        elif not isinstance(d[key], typ):
+            problems.append(
+                f"field {key!r} is {type(d[key]).__name__}")
+    if isinstance(d.get("schema"), int) and d["schema"] > SCHEMA:
+        problems.append(f"schema {d['schema']} is newer than {SCHEMA}")
+    vals = d.get("values")
+    if isinstance(vals, dict):
+        for k, v in vals.items():
+            if not isinstance(v, (int, float)):
+                problems.append(f"values[{k!r}] is not numeric")
+    return problems
+
+
+class BenchHistory:
+    """The results/history.jsonl accessor: append + filtered reads."""
+
+    def __init__(self, path):
+        self.path = pathlib.Path(path)
+
+    def append(self, record: BenchRecord) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record.to_dict(),
+                               separators=(",", ":")) + "\n")
+
+    def load(self, bench: Optional[str] = None) -> list:
+        """All schema-valid rows (oldest first), optionally one bench's.
+        Invalid/corrupt lines are skipped, not fatal."""
+        if not self.path.exists():
+            return []
+        rows = []
+        for line in self.path.read_text().splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if validate_record(d):
+                continue
+            if bench is None or d["bench"] == bench:
+                rows.append(d)
+        return rows
+
+    def benches(self) -> list:
+        """Distinct bench names present, sorted."""
+        return sorted({r["bench"] for r in self.load()})
+
+    def latest(self, bench: str) -> Optional[dict]:
+        rows = self.load(bench)
+        return rows[-1] if rows else None
+
+    def trailing(self, bench: str, n: int = 10) -> list:
+        """Up to ``n`` rows *before* the latest one (the baseline pool
+        the regression gate medians over)."""
+        rows = self.load(bench)
+        return rows[max(0, len(rows) - 1 - n):-1] if len(rows) > 1 else []

@@ -82,6 +82,8 @@ class JobDiagnostics:
     n_tokens: int = 0
     container_bytes: int = 0
     chunks: list = field(default_factory=list)   # [ChunkDiagnostics]
+    wall_s: float = 0.0          # submit→done wall (0 when not recorded)
+    phases: Optional[dict] = None   # PhaseReport.to_dict() (DESIGN.md §13)
 
     @property
     def payload_bytes(self) -> int:
@@ -125,6 +127,12 @@ class JobDiagnostics:
         acc = self.draft_acceptance
         if acc is not None:
             d["draft_acceptance"] = round(acc, 4)
+        # attribution fields only when recorded — pre-§13 sidecars stay
+        # byte-identical
+        if self.wall_s:
+            d["wall_s"] = round(self.wall_s, 6)
+        if self.phases is not None:
+            d["phases"] = self.phases
         return d
 
     def to_json(self, indent: int = 1) -> str:

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import logging
 import os
+import sys
 import traceback
 
 from . import metrics as _metrics
@@ -72,6 +73,16 @@ def configure(stream=None, level: str | None = None) -> logging.Logger:
     root.setLevel((level or os.environ.get("REPRO_LOG_LEVEL",
                                            "INFO")).upper())
     return root
+
+
+def console(msg="", *, err: bool = False) -> None:
+    """Raw console line for CLI-style tools (benchmarks/, tools/) whose
+    stdout IS their contract — result tables, gate verdicts, usage text.
+    Unlike ``log()`` there is no level/timestamp prefix; unlike bare
+    ``print()`` it is the one funnel the no-print lint allows, so every
+    operational emit site is enumerable."""
+    stream = sys.stderr if err else sys.stdout
+    stream.write(str(msg) + "\n")
 
 
 def _fmt_value(v) -> str:

@@ -206,7 +206,8 @@ class MetricsRegistry:
                 out[name] = {
                     "type": "histogram", "count": m.count,
                     "sum": m.sum, "mean": m.mean,
-                    "p50": m.quantile(0.5), "p99": m.quantile(0.99),
+                    "p50": m.quantile(0.5), "p95": m.quantile(0.95),
+                    "p99": m.quantile(0.99),
                     "buckets": {repr(le): c
                                 for le, c in m.nonzero_buckets().items()},
                 }
@@ -222,7 +223,7 @@ class MetricsRegistry:
             m = self._metrics[name]
             pname = _prom_name(name)
             if m.help:
-                lines.append(f"# HELP {pname} {m.help}")
+                lines.append(f"# HELP {pname} {_prom_help(m.help)}")
             if isinstance(m, Counter):
                 lines.append(f"# TYPE {pname} counter")
                 lines.append(f"{pname} {_prom_num(m.value)}")
@@ -241,6 +242,14 @@ class MetricsRegistry:
                 lines.append(f'{pname}_bucket{{le="+Inf"}} {m.count}')
                 lines.append(f"{pname}_sum {_prom_num(m.sum)}")
                 lines.append(f"{pname}_count {m.count}")
+                # bucket-resolution quantiles as companion gauges (the
+                # native histogram type has no quantile series; scrapers
+                # that can't run histogram_quantile() still get p50/95/99)
+                for q, suffix in ((0.5, "p50"), (0.95, "p95"),
+                                  (0.99, "p99")):
+                    qname = f"{pname}_{suffix}"
+                    lines.append(f"# TYPE {qname} gauge")
+                    lines.append(f"{qname} {_prom_num(m.quantile(q))}")
         return "\n".join(lines) + ("\n" if lines else "")
 
 
@@ -249,6 +258,12 @@ def _prom_name(name: str) -> str:
     if not out or out[0].isdigit():
         out = "m_" + out
     return "repro_" + out
+
+
+def _prom_help(text: str) -> str:
+    """Escape HELP text per the 0.0.4 exposition format: backslash and
+    newline only (HELP lines; label values would also escape quotes)."""
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
 
 
 def _prom_num(v) -> str:

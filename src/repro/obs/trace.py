@@ -20,6 +20,12 @@ Spans follow the registry switch: ``span()`` returns a shared null
 context manager when the target registry (argument, else the process
 default) is disabled, so a disabled process pays one attribute check
 per span site.
+
+When a ``obs.timeline.TimelineRecorder`` is installed, every closing
+span additionally appends one event (name, path, start, duration,
+thread, tags) to the recorder's ring buffer — the raw material for
+Chrome-trace export and per-job phase attribution (DESIGN.md §13).
+With no recorder installed that costs one module-attribute check.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ import sys
 import threading
 import time
 from . import metrics as _metrics
+from . import timeline as _timeline
 
 _tls = threading.local()
 _enabled = True          # module master switch (obs.trace.enable(False))
@@ -90,19 +97,21 @@ NULL = _NULL
 
 
 class Span:
-    __slots__ = ("name", "_reg", "_t0", "_jax", "path")
+    __slots__ = ("name", "_reg", "_t0", "_jax", "path", "tags", "_mirror")
 
-    def __init__(self, name: str, reg):
+    def __init__(self, name: str, reg, tags=None, mirror=True):
         self.name = name
         self._reg = reg
         self._jax = None
         self.path = name
+        self.tags = tags
+        self._mirror = mirror
 
     def __enter__(self):
         stack = _stack()
         stack.append(self.name)
         self.path = "/".join(stack)
-        if _jax_mirror:
+        if _jax_mirror and self._mirror:
             ta = _resolve_jax()
             if ta:
                 self._jax = ta(self.name)
@@ -115,17 +124,37 @@ class Span:
         if self._jax is not None:
             self._jax.__exit__(*exc)
         _stack().pop()
-        self._reg.histogram(
-            "span." + self.path + ".seconds",
-            "wall seconds spent in this span path").observe(dt)
+        if self._reg is not None:
+            self._reg.histogram(
+                "span." + self.path + ".seconds",
+                "wall seconds spent in this span path").observe(dt)
+        rec = _timeline._recorder
+        if rec is not None:
+            rec.record(self.name, self.path, self._t0, dt, self.tags)
         return False
 
 
-def span(name: str, registry=None):
+def span(name: str, registry=None, tags=None, mirror=True):
     """Open a traced region. Records into ``registry`` (default: the
     process-global one). Returns a shared null context manager when
-    tracing or the target registry is disabled."""
-    reg = registry if registry is not None else _metrics.registry()
-    if not (_enabled and reg.enabled):
+    tracing or the target registry is disabled. ``tags`` (e.g.
+    ``{"job": 3, "chunk": 7}``) ride along on timeline events only —
+    they never fan out histogram names. ``mirror=False`` skips the
+    jax.profiler.TraceAnnotation mirror for per-step hot-loop spans
+    whose TraceMe cost would dominate the region they time.
+
+    A process-wide timeline recorder (obs.timeline.install) overrides
+    the registry gate: spans still land on the timeline even when their
+    target registry is disabled or is not the recording service's own —
+    the recorder is process-scoped, so the timeline must see every span
+    in the process (a service's private registry would otherwise hide
+    the coder/model spans that record against the global one). Such
+    timeline-only spans skip the histogram observe."""
+    if not _enabled:
         return _NULL
-    return Span(name, reg)
+    reg = registry if registry is not None else _metrics.registry()
+    if reg.enabled:
+        return Span(name, reg, tags, mirror)
+    if _timeline._recorder is None:
+        return _NULL
+    return Span(name, None, tags, mirror)   # timeline-only span

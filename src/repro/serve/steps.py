@@ -24,11 +24,33 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.cdf import topk_quantized
 from repro.models import api as model_api
 from repro.models.transformer import lm_logits
 from repro.sharding.specs import (batch_pspecs, cache_pspecs, param_pspecs)
+
+
+class _TracedStep:
+    """Host-span wrapper around a jitted step: every dispatch opens an
+    ``obs.span`` (model.* — phase attribution, DESIGN.md §13) that also
+    mirrors into ``jax.profiler.TraceAnnotation``. The jit surface
+    (``.lower()`` for dryrun/HLO analysis, ``.trace`` etc.) passes
+    through untouched."""
+
+    __slots__ = ("_fn", "span_name")
+
+    def __init__(self, fn, span_name: str):
+        self._fn = fn
+        self.span_name = span_name
+
+    def __call__(self, *args, **kw):
+        with obs.span(self.span_name):
+            return self._fn(*args, **kw)
+
+    def __getattr__(self, attr):
+        return getattr(self._fn, attr)
 
 
 def _tok_batch_axes(mesh, b: int):
@@ -98,18 +120,18 @@ def make_score_step(cfg: ModelConfig, mesh=None, *, topk: int = 64,
         return ids, qpmf
 
     if mesh is None:
-        return jax.jit(score_step)
+        return _TracedStep(jax.jit(score_step), "model.score_step")
     bspecs = batch_pspecs(cfg, mesh, global_batch=global_batch)
     sh = lambda s: NamedSharding(mesh, s)
     score_layout = "serve" if cfg.family != "moe" else "train"
     pspecs = jax.tree_util.tree_map(
         sh, param_pspecs(cfg, mesh, layout=score_layout))
     out_b = bspecs["tokens"][0]
-    return jax.jit(
+    return _TracedStep(jax.jit(
         score_step,
         in_shardings=(pspecs, {k: sh(v) for k, v in bspecs.items()}),
         out_shardings=(sh(P(out_b, None, None)), sh(P(out_b, None, None))),
-    )
+    ), "model.score_step")
 
 
 def make_prefill_step(cfg: ModelConfig, mesh=None, *, batch: int,
@@ -140,18 +162,20 @@ def make_prefill_step(cfg: ModelConfig, mesh=None, *, batch: int,
             return cache
 
     if mesh is None:
-        return jax.jit(prefill_step, donate_argnums=(1,) if donate else ())
+        return _TracedStep(
+            jax.jit(prefill_step, donate_argnums=(1,) if donate else ()),
+            "model.prefill_step")
     sh = lambda s: NamedSharding(mesh, s)
     pspecs = jax.tree_util.tree_map(
         sh, param_pspecs(cfg, mesh, layout="serve"))
     cspecs = jax.tree_util.tree_map(sh, cache_pspecs(cfg, mesh, batch=batch))
     bspec = batch_pspecs(cfg, mesh, global_batch=batch)["tokens"][0]
-    return jax.jit(
+    return _TracedStep(jax.jit(
         prefill_step,
         in_shardings=(pspecs, cspecs, sh(P(bspec, None))),
         out_shardings=cspecs,
         donate_argnums=(1,) if donate else (),
-    )
+    ), "model.prefill_step")
 
 
 def make_serve_step(cfg: ModelConfig, mesh=None, *, batch: int,
@@ -177,15 +201,17 @@ def make_serve_step(cfg: ModelConfig, mesh=None, *, batch: int,
             return ids, qpmf, cache
 
     if mesh is None:
-        return jax.jit(serve_step, donate_argnums=(1,) if donate else ())
+        return _TracedStep(
+            jax.jit(serve_step, donate_argnums=(1,) if donate else ()),
+            "model.serve_step")
     sh = lambda s: NamedSharding(mesh, s)
     pspecs = jax.tree_util.tree_map(
         sh, param_pspecs(cfg, mesh, layout="serve"))
     cspecs = jax.tree_util.tree_map(sh, cache_pspecs(cfg, mesh, batch=batch))
     bspec = batch_pspecs(cfg, mesh, global_batch=batch)["tokens"][0]
-    return jax.jit(
+    return _TracedStep(jax.jit(
         serve_step,
         in_shardings=(pspecs, cspecs, sh(P(bspec))),
         out_shardings=(sh(P(bspec, None)), sh(P(bspec, None)), cspecs),
         donate_argnums=(1,) if donate else (),
-    )
+    ), "model.serve_step")

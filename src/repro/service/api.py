@@ -98,7 +98,8 @@ class CompressionService:
                  route: str = ROUTE_LLM,
                  router: CodecRouter | RouterConfig | None = None,
                  registry: MetricsRegistry | None = None,
-                 prefix_cache_tokens: int = 1 << 16):
+                 prefix_cache_tokens: int = 1 << 16,
+                 trace: "str | obs.TimelineRecorder | None" = None):
         if topk and topk >= predictor.vocab_size:
             topk = 0
         if (1 << precision) <= (topk + 1 if topk else predictor.vocab_size):
@@ -154,6 +155,21 @@ class CompressionService:
         self._next_job = 0
         self._legacy: LLMCompressor | None = None
         self._stats = ServiceStats(self)
+        # performance attribution (DESIGN.md §13): trace= installs a
+        # process-wide TimelineRecorder for this service's lifetime —
+        # every span lands on the timeline, JobHandle.diagnostics gains a
+        # per-job PhaseReport, and write_timeline() exports Chrome-trace
+        # JSON. trace may be a path (saved by write_timeline/close), a
+        # recorder instance, or None (no recording, no overhead).
+        self.trace_path = None
+        self.trace_recorder: obs.TimelineRecorder | None = None
+        if trace is not None:
+            if isinstance(trace, obs.TimelineRecorder):
+                self.trace_recorder = trace
+            else:
+                self.trace_path = trace
+                self.trace_recorder = obs.TimelineRecorder()
+            obs.timeline.install(self.trace_recorder)
 
     # ------------------------------------------------------------- submit
     def submit_compress(self, tokens, *, priority: int = 0,
@@ -380,7 +396,8 @@ class CompressionService:
         bpt = None
         if h is not None and h.count:
             bpt = {"count": h.count, "mean": h.mean,
-                   "p50": h.quantile(0.5), "p99": h.quantile(0.99)}
+                   "p50": h.quantile(0.5), "p95": h.quantile(0.95),
+                   "p99": h.quantile(0.99)}
         offered = reg.value("spec.drafted_tokens")
         acc = reg.value("spec.drafted_accepted")
         return {
@@ -403,7 +420,34 @@ class CompressionService:
                 "size_tokens": self.prefix_cache.size_tokens,
             },
             "metrics": reg.snapshot(),
+            "phases": {k: round(v, 6) for k, v in
+                       obs.timeline.phases_from_registry(reg).items()},
         }
+
+    # -------------------------------------------------------- attribution
+    def write_timeline(self, path=None) -> "str | None":
+        """Export the service's recorded timeline as Chrome-trace JSON
+        (loads in chrome://tracing / ui.perfetto.dev). ``path`` defaults
+        to the ``trace=`` path given at construction; returns the path
+        written, or None when the service records no timeline."""
+        rec = self.trace_recorder
+        path = path if path is not None else self.trace_path
+        if rec is None or path is None:
+            return None
+        rec.save(path)
+        return str(path)
+
+    def close(self) -> None:
+        """Uninstall this service's timeline recorder (and save to the
+        ``trace=`` path, if one was given). Idempotent; a service without
+        tracing closes as a no-op."""
+        rec = self.trace_recorder
+        if rec is None:
+            return
+        self.write_timeline()
+        if obs.timeline.active() is rec:
+            obs.timeline.uninstall()
+        self.trace_recorder = None
 
     # ------------------------------------------------------------ helpers
     def _new_job_id(self) -> int:

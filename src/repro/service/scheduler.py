@@ -228,7 +228,7 @@ class SlotScheduler:
         self._h_step = self.registry.histogram(
             "span.service.step.seconds",
             f"wall seconds per scheduler step (1-in-{self.span_every} "
-            f"sampled)")
+            f"sampled; every step while a timeline recorder is installed)")
         # per-slot diagnostics accrual (registry.enabled only). Decode
         # lanes: the coder's interval freq for position t lands in
         # _fbuf[b, t] (one fancy write per step, all log2 math deferred
@@ -303,6 +303,15 @@ class SlotScheduler:
         free = np.nonzero(~self._active)[0]
         if not free.size or not self._queue:
             return
+        # timeline-only span (DESIGN.md §13): placed after the idle early-
+        # out so it marks productive refills, not every step's free-slot
+        # check — the recording leg's overhead budget is 10%
+        sp = obs.span("service.refill", self.registry, mirror=False) \
+            if obs.timeline.active() is not None else obs.trace.NULL
+        with sp:
+            self._refill_slots(free)
+
+    def _refill_slots(self, free) -> None:
         mask = np.zeros(self.B, bool)
         bos = getattr(self.predictor, "bos_id")
         restores: list[tuple[int, object]] = []
@@ -329,7 +338,11 @@ class SlotScheduler:
                 can_cache = (self.prefix_cache is not None
                              and hasattr(self.predictor, "restore_slot"))
                 if can_cache and getattr(task, "cacheable", False):
-                    matched, snap = self.prefix_cache.lookup(ctx)
+                    with obs.span("prefix_cache.lookup", self.registry,
+                                  mirror=False) \
+                            if obs.timeline.active() is not None \
+                            else obs.trace.NULL:
+                        matched, snap = self.prefix_cache.lookup(ctx)
                     if matched:
                         # resume from the stored post-prefill state: the
                         # snapshot's cache consumed [BOS, ctx[:matched-1]]
@@ -371,19 +384,33 @@ class SlotScheduler:
     def step(self) -> bool:
         """One fixed-shape model step + one coder step over all active
         slots. Returns False when there was nothing to do."""
-        self._ensure_state()
-        self._refill()
-        m = self._active
-        if not m.any():
-            return False
         tel = self.registry.enabled
-        sp = obs.span("service.step", self.registry) \
-            if tel and self.span_every \
-            and self._c_steps.value % self.span_every == 0 else obs.trace.NULL
+        # a live timeline recorder lifts the 1-in-N span sampling: phase
+        # attribution needs every step on the timeline (≥90% coverage),
+        # and the recording leg has its own ≤10% overhead budget
+        rec = obs.timeline.active()
+        sp = obs.span("service.step", self.registry,
+                      mirror=rec is None) \
+            if rec is not None or (tel and self.span_every
+                                   and self._c_steps.value
+                                   % self.span_every == 0) else obs.trace.NULL
         with sp:
-            logits, self._state = self.predictor.decode_step(self._state,
-                                                             self._prev)
-            logits = np.asarray(logits)
+            self._ensure_state()
+            self._refill()
+            m = self._active
+            if not m.any():
+                return False
+            # model phase attribution: only worth a span while a timeline
+            # is recording (serve/steps.py predictors carry their own
+            # model.* spans; plain predictors would otherwise attribute
+            # model time to the scheduler)
+            msp = obs.span("model.decode_step", self.registry,
+                           mirror=False) \
+                if rec is not None else obs.trace.NULL
+            with msp:
+                logits, self._state = self.predictor.decode_step(
+                    self._state, self._prev)
+                logits = np.asarray(logits)
             pm = m & (self._cpos < self._ctxlen)     # prefilling context
             am = m & ~pm                             # coding this step
             dm = am & self._is_dec
@@ -465,7 +492,14 @@ class SlotScheduler:
                                                               int(b)))
                     self._cachekey[int(b)] = None
             for b in np.nonzero(m & (self._t >= self._valid))[0]:
-                self._finish_slot(int(b))
+                b = int(b)
+                fin = self._tasks[b]
+                with obs.span("service.finish_slot", self.registry,
+                              tags={"job": fin.job.job_id,
+                                    "chunk": fin.chunk_index},
+                              mirror=False) \
+                        if rec is not None else obs.trace.NULL:
+                    self._finish_slot(b)
         if tel and self.log_every \
                 and self._c_steps.value % self.log_every == 0:
             obs.log("scheduler.progress", steps=self._c_steps.value,

@@ -16,6 +16,7 @@ puts them in a ``<path>.diag.json`` file next to it.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -100,6 +101,10 @@ class Job:
     _result: Any = None
     _error: Optional[Exception] = None
     _done: bool = False
+    # submit→done wall interval, on the same perf_counter clock the span
+    # timeline records with — so a job's PhaseReport window is exact
+    t_submit: float = field(default_factory=time.perf_counter)
+    t_done: float = 0.0
 
     def _chunk_done(self, chunk_index: int, result,
                     diag: Optional[obs.ChunkDiagnostics] = None,
@@ -124,12 +129,14 @@ class Job:
                 self._count_failure()
                 self._error = e
             self._done = True
+            self.t_done = time.perf_counter()
 
     def _fail(self, err: Exception) -> None:
         if self._error is None:         # count each job's failure once
             self._count_failure()
         self._error = err
         self._done = True
+        self.t_done = time.perf_counter()
 
     def _count_failure(self) -> None:
         if self.registry is not None:
@@ -142,6 +149,7 @@ class Job:
         e.g. legacy-codec containers decoded through the grouped path)."""
         self._result = result
         self._done = True
+        self.t_done = time.perf_counter()
 
     @property
     def done(self) -> bool:
@@ -183,10 +191,30 @@ class JobHandle:
         container_bytes = 0
         if job.kind == COMPRESS and isinstance(job._result, tuple):
             container_bytes = len(job._result[0])
-        return obs.JobDiagnostics(
+        d = obs.JobDiagnostics(
             job_id=job.job_id, kind=job.kind, codec=job.codec,
             n_tokens=job.n_tokens, container_bytes=container_bytes,
             chunks=[job._diags[i] for i in sorted(job._diags)])
+        if job.t_done:
+            d.wall_s = max(0.0, job.t_done - job.t_submit)
+        rep = self.phase_report()
+        if rep is not None:
+            d.phases = rep.to_dict()
+        return d
+
+    def phase_report(self):
+        """Per-phase wall-time attribution of this job's submit→done
+        interval (``obs.PhaseReport``), from the service's timeline
+        recorder — None when the service wasn't constructed with
+        ``trace=`` (DESIGN.md §13)."""
+        job = self._job
+        self._service._run_until(job)
+        rec = getattr(self._service, "trace_recorder", None)
+        if rec is None or not job.t_done:
+            return None
+        return obs.PhaseReport.from_events(
+            rec.events(), t0=job.t_submit - rec.t_start,
+            t1=job.t_done - rec.t_start, dropped=rec.dropped)
 
     def write_sidecar(self, container_path):
         """Write ``diagnostics`` as JSON next to ``container_path``

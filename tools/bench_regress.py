@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate over results/history.jsonl.
+
+Compares the **latest** history record of every bench against the
+**median of its trailing window** (up to the 10 prior records) and fails
+— exit 1, for CI — when either:
+
+* wall regression: ``us_per_call`` grew by more than ``--wall-limit``
+  (default 15%) over the trailing median; or
+* ratio regression: any deterministic higher-is-better derived value
+  (``ratio``/``gain``/``speedup``-family keys, see ``RATIO_KEYS``)
+  dropped below the trailing median by more than ``--ratio-limit``
+  (default 1% — float/derived-metric jitter allowance, not a budget;
+  compression ratios are deterministic, so any real regression clears
+  it).
+
+Benches with fewer than 2 records pass vacuously (a fresh trajectory
+cannot regress), as does a missing history file — the gate tightens as
+the trajectory accumulates. Quick (--quick) and full runs are compared
+only against records of the same mode: their workloads differ, so their
+timings are not one trajectory.
+
+Usage::
+
+    python tools/bench_regress.py [--history results/history.jsonl]
+                                  [--wall-limit 0.15] [--ratio-limit 0.01]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import statistics
+import sys
+
+sys.path[:0] = ["src", "."]
+
+from repro.obs import console  # noqa: E402
+from repro.obs.bench_history import BenchHistory  # noqa: E402
+
+DEFAULT_HISTORY = pathlib.Path(__file__).resolve().parents[1] / \
+    "results" / "history.jsonl"
+WALL_LIMIT = 0.15
+RATIO_LIMIT = 0.01
+TRAILING = 10
+
+#: derived-value key fragments treated as higher-is-better quality
+#: metrics (compression ratio, routed gain, prefill savings). Timing
+#: noise lives in us_per_call and the *speedup* keys — speedups are
+#: wall-derived, so they ride the wall rule's 15%, not the ratio rule.
+RATIO_KEYS = ("ratio", "gain", "bpt_improvement", "savings")
+
+
+def is_ratio_key(key: str) -> bool:
+    k = key.lower()
+    return any(frag in k for frag in RATIO_KEYS)
+
+
+def check_bench(bench: str, latest: dict, trailing: list,
+                wall_limit: float, ratio_limit: float) -> list:
+    """Regression messages for one bench ([] = pass)."""
+    problems = []
+    same_mode = [r for r in trailing if r["quick"] == latest["quick"]]
+    if not same_mode:
+        return problems
+    med_wall = statistics.median(r["us_per_call"] for r in same_mode)
+    wall = latest["us_per_call"]
+    if med_wall > 0 and wall > med_wall * (1.0 + wall_limit):
+        problems.append(
+            f"{bench}: wall {wall:.1f}us/call vs trailing median "
+            f"{med_wall:.1f}us (+{(wall / med_wall - 1) * 100:.1f}% > "
+            f"{wall_limit * 100:.0f}%)")
+    for key, val in latest.get("values", {}).items():
+        if not is_ratio_key(key):
+            continue
+        prior = [r["values"][key] for r in same_mode
+                 if key in r.get("values", {})]
+        if not prior:
+            continue
+        med = statistics.median(prior)
+        if med > 0 and val < med * (1.0 - ratio_limit):
+            problems.append(
+                f"{bench}: {key} {val:.4f} vs trailing median {med:.4f} "
+                f"({(val / med - 1) * 100:+.2f}% < -{ratio_limit * 100:.0f}%)")
+    return problems
+
+
+def run_gate(history_path, wall_limit: float = WALL_LIMIT,
+             ratio_limit: float = RATIO_LIMIT,
+             trailing_n: int = TRAILING, log=console) -> list:
+    """All regression messages across the trajectory ([] = gate passes)."""
+    hist = BenchHistory(history_path)
+    problems = []
+    benches = hist.benches()
+    if not benches:
+        log(f"bench_regress: no history at {history_path} — pass (empty "
+            f"trajectory)")
+        return problems
+    for bench in benches:
+        latest = hist.latest(bench)
+        trailing = hist.trailing(bench, trailing_n)
+        msgs = check_bench(bench, latest, trailing, wall_limit, ratio_limit)
+        n = len(hist.load(bench))
+        verdict = "REGRESSED" if msgs else "ok"
+        log(f"bench_regress: {bench}: {n} record(s), latest "
+            f"{latest['us_per_call']:.1f}us/call [{latest['commit'] or '?'}]"
+            f" — {verdict}")
+        problems.extend(msgs)
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history", default=str(DEFAULT_HISTORY))
+    ap.add_argument("--wall-limit", type=float, default=WALL_LIMIT,
+                    help="max allowed us_per_call growth vs trailing "
+                         "median (fraction, default 0.15)")
+    ap.add_argument("--ratio-limit", type=float, default=RATIO_LIMIT,
+                    help="max allowed drop in ratio-family derived values "
+                         "(fraction, default 0.01)")
+    ap.add_argument("--trailing", type=int, default=TRAILING,
+                    help="trailing-window size medianed as the baseline")
+    args = ap.parse_args(argv)
+    problems = run_gate(args.history, args.wall_limit, args.ratio_limit,
+                        args.trailing)
+    for p in problems:
+        console(f"FAIL: {p}", err=True)
+    if problems:
+        console(f"bench_regress: {len(problems)} regression(s)", err=True)
+        return 1
+    console("bench_regress: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

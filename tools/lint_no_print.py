@@ -1,11 +1,14 @@
 #!/usr/bin/env python3
-"""Repo lint: forbid bare ``print(`` calls inside src/repro.
+"""Repo lint: forbid bare ``print(`` calls in src/repro, benchmarks,
+and tools.
 
 Operational output must go through ``repro.obs`` (structured events with
-a level, a logger name, and an error counter — see DESIGN.md §10), not
-ad-hoc prints that vanish under services and can't be filtered.  The one
-exemption is the CLI front end (``src/repro/cli.py``): its stdout *is*
-its user interface.
+a level, a logger name, and an error counter — see DESIGN.md §10) or the
+``repro.obs.console`` funnel for deliberate human-facing table/report
+output (benchmarks, CLI gates — see DESIGN.md §13), not ad-hoc prints
+that vanish under services and can't be filtered.  The one exemption is
+the CLI front end (``src/repro/cli.py``): its stdout *is* its user
+interface.
 
 AST-based, not grep-based, so ``"print("`` inside a string literal (e.g.
 data/synthetic.py's corpus text) never false-positives.  Only direct
@@ -14,7 +17,8 @@ calls to the builtin name ``print`` are flagged — a method named
 
 Usage::
 
-    python tools/lint_no_print.py [ROOT]      # default ROOT = src/repro
+    python tools/lint_no_print.py [ROOT ...]  # default: src/repro,
+                                              # benchmarks, tools
 
 Exits 0 when clean, 1 with a ``file:line: message`` list otherwise.
 Wired into CI (.github/workflows/ci.yml) next to the test jobs.
@@ -25,7 +29,15 @@ import ast
 import pathlib
 import sys
 
-ALLOWED = {"cli.py"}    # paths relative to ROOT allowed to print
+sys.path[:0] = ["src", "."]
+
+from repro.obs import console  # noqa: E402
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+DEFAULT_ROOTS = (_REPO / "src" / "repro", _REPO / "benchmarks",
+                 _REPO / "tools")
+
+ALLOWED = {"cli.py"}    # paths relative to a ROOT allowed to print
 
 
 def find_prints(tree: ast.AST) -> list[int]:
@@ -48,20 +60,22 @@ def lint(root: pathlib.Path) -> list[str]:
             problems.append(f"{path}:{e.lineno}: syntax error: {e.msg}")
             continue
         problems.extend(
-            f"{path}:{line}: print() call — use repro.obs.log instead"
+            f"{path}:{line}: print() call — use repro.obs.log / "
+            f"repro.obs.console instead"
             for line in find_prints(tree))
     return problems
 
 
 def main(argv: list[str] | None = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
-    root = pathlib.Path(argv[0]) if argv else \
-        pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
-    problems = lint(root)
+    roots = [pathlib.Path(a) for a in argv] if argv else list(DEFAULT_ROOTS)
+    problems = []
+    for root in roots:
+        problems.extend(lint(root))
     for p in problems:
-        print(p)
+        console(p, err=True)
     if problems:
-        print(f"lint_no_print: {len(problems)} problem(s)")
+        console(f"lint_no_print: {len(problems)} problem(s)", err=True)
         return 1
     return 0
 
